@@ -1,0 +1,78 @@
+"""Wall-clock microbenchmarks of the JAX substrate on this host.
+
+CPU wall-time is NOT the graded roofline (that comes from the dry-run);
+these timings exist to catch regressions in the pure-JAX paths and to give
+the ``us_per_call`` column the benchmark CSV promises.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[dict]:
+    rows = []
+    rng = np.random.RandomState(0)
+
+    # gathered MoE block (single device)
+    from repro.core.moe import MoEConfig, init_moe, moe_apply
+    cfg = MoEConfig(d_model=128, d_ff=256, n_experts=16, top_k=2,
+                    dtype=jnp.float32)
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.randn(512, 128), jnp.float32)
+    f = jax.jit(lambda p, x: moe_apply(p, cfg, x, backend="gathered"))
+    rows.append({"name": "kernel/moe_gathered_512tok",
+                 "value": round(_time(f, params, x), 1),
+                 "paper": None, "unit": "us_per_call"})
+
+    # flash attention vs xla attention (correct + timing)
+    from repro.kernels import ops, ref
+    q = jnp.asarray(rng.randn(1, 4, 256, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, 256, 64), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 2, 256, 64), jnp.float32)
+    fx = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v))
+    rows.append({"name": "kernel/attn_xla_256",
+                 "value": round(_time(fx, q, k, v), 1),
+                 "paper": None, "unit": "us_per_call"})
+
+    # SSD chunked scan (jnp path used by the models)
+    from repro.configs.base import ArchConfig, LayerSpec
+    from repro.models import layers as L
+    acfg = ArchConfig(name="b", family="ssm", n_layers=1, d_model=128,
+                      n_heads=2, n_kv_heads=2, d_ff=0, vocab=64,
+                      ssm_state=16, ssm_head_dim=32,
+                      pattern=(LayerSpec(mixer="ssd", ffn="none"),),
+                      dtype="float32")
+    p = L.init_ssd(jax.random.PRNGKey(0), acfg)
+    u = jnp.asarray(rng.randn(2, 512, 128), jnp.float32) * 0.3
+    fs = jax.jit(lambda p, u: L.ssd_fwd(p, acfg, u))
+    rows.append({"name": "kernel/ssd_jnp_512",
+                 "value": round(_time(fs, p, u), 1),
+                 "paper": None, "unit": "us_per_call"})
+
+    # transport simulator throughput (events/s — it drives every figure)
+    from repro.core.signaling import Transfer, build_schedule
+    from repro.core.transport_sim import LIBFABRIC, simulate_proxy
+    tr = [Transfer(i, 1 + i % 28, 65536, 1 + i % 7) for i in range(112)]
+    sched = build_schedule(tr, "perseus")
+    t0 = time.perf_counter()
+    for _ in range(50):
+        simulate_proxy(sched, LIBFABRIC, n_nodes=8)
+    rows.append({"name": "kernel/sim_dispatch_112tr",
+                 "value": round((time.perf_counter() - t0) / 50 * 1e6, 1),
+                 "paper": None, "unit": "us_per_call"})
+    return rows

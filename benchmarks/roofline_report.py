@@ -1,0 +1,142 @@
+"""Roofline analysis from the dry-run artifacts (DESIGN.md §8).
+
+Per (arch x shape x mesh) cell:
+
+    compute term    = HLO_FLOPs_global   / (chips * 197e12 bf16 FLOP/s)
+    memory term     = HLO_bytes_global   / (chips * 819e9  B/s HBM)
+    collective term = wire_bytes_per_dev / (links_per_chip * 50e9 B/s ICI)
+
+FLOPs/bytes come from the loop-corrected two-point extrapolation recorded
+by ``repro.launch.dryrun`` (cost_analysis counts while bodies once);
+collective bytes are parsed from the optimized HLO.  The dominant term is
+the bottleneck the §Perf hillclimb attacks.  MODEL_FLOPS = 6*N*D (dense) or
+6*N_active*D (MoE) with D = trained/prefilled tokens (decode: batch tokens);
+the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+# TPU v5e-class hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+ICI_LINKS = 2                # usable links per chip on a 2D torus axis avg
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun")
+
+
+def model_flops(rec: dict) -> float:
+    """6*N(active)*D for the cell's step (train: fwd+bwd = 3x2ND -> 6ND;
+    prefill: 2ND; decode: 2N*B_new_tokens)."""
+    n = rec["active_params"]
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * n * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * n * tokens
+    tokens = rec["global_batch"]          # one new token per sequence
+    return 2.0 * n * tokens
+
+
+def load_cells(results_dir: str = RESULTS_DIR, tag: str = "") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("tag", "") != tag:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def roofline_terms(rec: dict) -> dict | None:
+    if rec.get("status") != "OK":
+        return None
+    chips = rec.get("n_devices", 256)
+    ex = rec.get("extrapolated", {})
+    flops_dev = ex.get("flops") or rec.get("cost", {}).get("flops", 0.0)
+    bytes_dev = ex.get("bytes_accessed") or rec.get("cost", {}).get(
+        "bytes_accessed", 0.0)
+    wire_dev = ex.get("wire_bytes_per_device")
+    if wire_dev is None:
+        wire_dev = rec.get("collectives", {}).get(
+            "wire_bytes_per_device", 0.0)
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = wire_dev / (ICI_BW * ICI_LINKS)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_global = flops_dev * chips
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "bound_s": max(terms.values()),
+        "roofline_fraction": (
+            compute_s / max(terms.values()) if max(terms.values()) else 0.0
+        ),
+    }
+
+
+_SUGGEST = {
+    "compute": "compute-bound: raise MFU (fused kernels, larger tiles); "
+               "reduce remat recompute if useful_ratio is low",
+    "memory": "HBM-bound: fuse elementwise chains, cast activations to "
+              "bf16, shrink optimizer/cache traffic",
+    "collective": "collective-bound: reshard to cut all-gathers, overlap "
+                  "dispatch with expert compute (Perseus schedule), "
+                  "reduce-scatter instead of all-reduce",
+}
+
+
+def report(results_dir: str = RESULTS_DIR, tag: str = "") -> str:
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s "
+        "| dominant | MODEL/HLO | roofline_frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    rows = []
+    for rec in load_cells(results_dir, tag):
+        key = f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+        if rec["status"] == "SKIP":
+            lines.append(key + "| — | — | — | SKIP | — | — |")
+            continue
+        if rec["status"] != "OK":
+            lines.append(key + "| — | — | — | FAIL | — | — |")
+            continue
+        t = roofline_terms(rec)
+        rows.append((rec, t))
+        lines.append(
+            key + f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {t['dominant']} "
+            f"| {t['useful_ratio']:.2f} | {t['roofline_fraction']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def csv_rows(results_dir: str = RESULTS_DIR, tag: str = "") -> list[dict]:
+    out = []
+    for rec in load_cells(results_dir, tag):
+        if rec["status"] != "OK":
+            out.append({"name": f"roofline/{rec['arch']}/{rec['shape']}/"
+                        f"{rec['mesh']}", "value": -1.0,
+                        "paper": None, "unit": rec["status"]})
+            continue
+        t = roofline_terms(rec)
+        out.append({
+            "name": f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+            "value": round(t["roofline_fraction"], 4),
+            "paper": None,
+            "unit": f"dom={t['dominant']}",
+        })
+    return out

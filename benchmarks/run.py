@@ -1,0 +1,57 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (scaffold contract): ``us_per_call``
+carries each benchmark's primary value, ``derived`` carries the paper's
+reference number (empty when the paper has no anchor) plus the unit.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.run              # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig9  # one figure
+    PYTHONPATH=src python -m benchmarks.run --roofline   # dry-run report
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated figure keys (fig1..appendixA)")
+    ap.add_argument("--roofline", action="store_true",
+                    help="print the dry-run roofline table and exit")
+    ap.add_argument("--skip-wallclock", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks import figures, kernel_bench, roofline_report
+
+    if args.roofline:
+        print(roofline_report.report())
+        return
+
+    rows: list[dict] = []
+    keys = (args.only.split(",") if args.only
+            else list(figures.ALL_FIGURES))
+    for key in keys:
+        fn = figures.ALL_FIGURES[key]
+        print(f"# {key}: {fn.__doc__.splitlines()[0]}", file=sys.stderr)
+        rows.extend(fn())
+    if not args.only and not args.skip_wallclock:
+        rows.extend(kernel_bench.run())
+        try:
+            rows.extend(roofline_report.csv_rows())
+        except Exception as e:  # dry-run artifacts may not exist yet
+            print(f"# roofline skipped: {e!r}", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        paper = "" if r["paper"] is None else r["paper"]
+        derived = f"paper={paper};unit={r['unit']}"
+        print(f"{r['name']},{r['value']},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Perseus ablation walkthrough (paper §6.3 + beyond-paper extensions).
+
+Sweeps the two mechanisms independently and combined across node counts,
+then demonstrates the three beyond-paper optimizations from DESIGN.md §10:
+
+  * analytic adaptive group sizing (vs the paper's fixed per-PE grouping),
+  * coalesced per-destination signal words (1 signal op per group),
+  * latency-aware group ordering (slowest destination first).
+
+Run:  PYTHONPATH=src python examples/perseus_ablation.py
+"""
+
+from repro.core.signaling import (
+    ScheduleKind, build_schedule, moe_dispatch_transfers, optimal_group_size,
+)
+from repro.core.transport_sim import (
+    LIBFABRIC, QWEN3_30B, simulate_forward, simulate_proxy,
+)
+
+
+def fwd(sched, n, s=1024, **kw):
+    return simulate_forward(
+        QWEN3_30B, tokens_per_pe=s, n_nodes=n, pe_per_node=4,
+        transport=LIBFABRIC, schedule=sched, **kw,
+    )
+
+
+print("ablation (Qwen3-30B, S=1K, speedup over vanilla):")
+print(f"{'nodes':>6} {'decoupled':>10} {'nic_only':>10} {'perseus':>10}")
+for n in (2, 4, 8, 16):
+    v = fwd("coupled", n)
+    print(f"{n:6d} {v/fwd('decoupled', n):10.2f} "
+          f"{v/fwd('nic_ordered', n):10.2f} {v/fwd('perseus', n):10.2f}")
+print("(paper Fig. 10: decoupled wins at 2 nodes, NIC-side wins at 8, "
+      "combined 1.5-3.5x at 8 nodes)")
+
+# ---- beyond-paper: adaptive group size -----------------------------------
+print("\nbeyond-paper: adaptive group sizing (8 nodes, decoupled):")
+transfers = moe_dispatch_transfers(
+    my_pe=0, n_pe=32, pe_per_node=4, n_experts=128,
+    bytes_per_expert=64 * 2048 * 2,
+)
+base = simulate_proxy(
+    build_schedule(transfers, "decoupled"), LIBFABRIC, n_nodes=8
+).total_time
+g_star = optimal_group_size(len(transfers), drain_base_us=63.0,
+                            per_put_wait_us=1.2)
+adaptive = simulate_proxy(
+    build_schedule(transfers, "decoupled", group_size=g_star),
+    LIBFABRIC, n_nodes=8,
+).total_time
+print(f"  per-PE default: {base/1e3:.2f} ms | analytic g*={g_star}: "
+      f"{adaptive/1e3:.2f} ms ({base/adaptive:.2f}x)")
+
+# ---- beyond-paper: latency-aware ordering --------------------------------
+slow_first = sorted(transfers, key=lambda t: -t.dest_node)
+fast_first = sorted(transfers, key=lambda t: t.dest_node)
+t_slow = simulate_proxy(build_schedule(slow_first, "perseus"),
+                        LIBFABRIC, n_nodes=8).total_time
+t_fast = simulate_proxy(build_schedule(fast_first, "perseus"),
+                        LIBFABRIC, n_nodes=8).total_time
+print(f"\nbeyond-paper: group ordering — slowest-dest-first "
+      f"{t_slow/1e3:.3f} ms vs fastest-first {t_fast/1e3:.3f} ms "
+      f"({t_fast/t_slow:.3f}x)")
+
+# ---- beyond-paper: coalesced signal words --------------------------------
+# One 8B signal per destination carrying a bitfield of expert flags:
+# receiver decodes 8 experts per word; signal op count drops k_dest x.
+coalesced = [t for i, t in enumerate(transfers) if i % 8 == 0]
+sched_c = build_schedule(transfers, "put_only").ops + build_schedule(
+    coalesced, "perseus").ops[len(coalesced):]
+t_c = simulate_proxy(sched_c, LIBFABRIC, n_nodes=8).total_time
+t_p = simulate_proxy(build_schedule(transfers, "perseus"),
+                     LIBFABRIC, n_nodes=8).total_time
+print(f"beyond-paper: coalesced signal words {t_c/1e3:.3f} ms vs per-expert "
+      f"signals {t_p/1e3:.3f} ms ({t_p/t_c:.2f}x on the dispatch phase)")

@@ -1,0 +1,59 @@
+"""Quickstart: the paper's mechanism in five minutes.
+
+1. Builds the Qwen3-30B dispatch schedule (vanilla vs Perseus) and shows
+   the fence-count collapse (96 -> 12 in the running example).
+2. Runs both through the calibrated proxy/NIC simulator to reproduce the
+   signaling-efficiency cliff and its recovery (Fig. 5a / Fig. 14).
+3. Runs the actual JAX MoE block with the dense oracle vs the gathered
+   backend to show numerical equivalence of the dispatch machinery.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.moe import MoEConfig, init_moe, moe_apply
+from repro.core.signaling import build_schedule, moe_dispatch_transfers
+from repro.core.transport_sim import LIBFABRIC, signaling_efficiency, simulate_proxy
+
+# -- 1. schedules ----------------------------------------------------------
+transfers = moe_dispatch_transfers(
+    my_pe=0, n_pe=16, pe_per_node=4, n_experts=128,
+    bytes_per_expert=64 * 2048 * 2,   # EC=64 tokens of H=2048 bf16
+)
+print(f"dispatch: {len(transfers)} remote expert tiles -> "
+      f"{len({t.dest_pe for t in transfers})} remote PEs")
+for kind in ("coupled", "decoupled", "nic_ordered", "perseus"):
+    s = build_schedule(transfers, kind)
+    print(f"  {kind:12s} fences={s.n_fences:3d} proxy_fences={s.n_proxy_fences}")
+
+# -- 2. simulator ----------------------------------------------------------
+print("\nsignaling efficiency (96 x 4KB transfers, Fig. 5a/14):")
+for nodes in (2, 4, 8):
+    ev = signaling_efficiency(n_transfers=96, nbytes=4096, n_nodes=nodes,
+                              params=LIBFABRIC, kind="coupled")
+    ep = signaling_efficiency(n_transfers=96, nbytes=4096, n_nodes=nodes,
+                              params=LIBFABRIC, kind="perseus")
+    print(f"  {nodes} nodes: vanilla {ev*100:5.1f}%  perseus {ep*100:5.1f}%")
+
+r = simulate_proxy(build_schedule(transfers, "coupled"), LIBFABRIC, n_nodes=4)
+print(f"\nvanilla dispatch (4 nodes): total {r.total_time/1e3:.2f} ms, "
+      f"proxy stalled {r.proxy_stall/1e3:.2f} ms "
+      f"({100*r.proxy_stall/r.total_time:.0f}%)")
+r = simulate_proxy(build_schedule(transfers, "perseus"), LIBFABRIC, n_nodes=4)
+print(f"perseus dispatch (4 nodes): total {r.total_time/1e3:.2f} ms, "
+      f"proxy stalled {r.proxy_stall/1e3:.2f} ms")
+
+# -- 3. the real MoE block --------------------------------------------------
+cfg = MoEConfig(d_model=64, d_ff=128, n_experts=8, top_k=2,
+                dtype=jnp.float32, capacity_factor=4.0)
+params = init_moe(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (128, 64))
+dense = moe_apply(params, cfg, x, backend="dense")
+gathered = moe_apply(params, cfg, x, backend="gathered")
+err = float(jnp.abs(dense - gathered).max())
+print(f"\nMoE backends: |dense - gathered|_max = {err:.2e}")
+print("(EP collective / Pallas megakernel backends validated in "
+      "tests/test_moe.py under a multi-device mesh)")

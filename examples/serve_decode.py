@@ -1,0 +1,36 @@
+"""Serving example: continuous-batching decode on three model families.
+
+Decode is the paper's overhead-dominated regime (small S): every generated
+token costs one expert dispatch per MoE layer, which is exactly the
+per-expert put-with-signal traffic Perseus unblocks.  Here we serve reduced
+configs of a dense (tinyllama), an MoE (dbrx) and an SSM (mamba2) arch
+through the same Server.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import time
+
+import jax
+
+from repro.configs.base import reduce_for_smoke
+from repro.configs.registry import get_config
+from repro.models.registry import build_model
+from repro.runtime.serve_loop import Request, ServeConfig, Server
+
+for arch in ("tinyllama-1.1b", "dbrx-132b", "mamba2-780m"):
+    cfg = reduce_for_smoke(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    srv = Server(model, params, ServeConfig(slots=3, max_len=96))
+    for rid in range(5):
+        srv.submit(Request(rid=rid, prompt=[(rid * 7 + j) % cfg.vocab
+                                            for j in range(1, 5)],
+                           max_new_tokens=6))
+    t0 = time.perf_counter()
+    done = srv.run_until_drained()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in done)
+    print(f"{arch:18s} ({cfg.family:6s}): {len(done)} reqs, {toks} tokens, "
+          f"{toks/dt:6.1f} tok/s  sample={done[0].out}")
+print("OK: continuous batching served dense, MoE and SSM families")

@@ -1,0 +1,76 @@
+"""End-to-end training driver: a ~100M-param MoE transformer for a few
+hundred steps with checkpoint/restart mid-run.
+
+This exercises the full stack the paper's workload depends on: synthetic
+data pipeline -> PeriodicDecoder with MoE FFN (capacity dispatch, the same
+routing the Perseus megakernel serves) -> AdamW -> fault-tolerant trainer
+with an *injected crash* at step 60, recovered from the last checkpoint.
+
+Run:  PYTHONPATH=src python examples/train_moe_e2e.py  (~10-20 min on CPU)
+Quick: PYTHONPATH=src python examples/train_moe_e2e.py --steps 40 --dim 64
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import ArchConfig, LayerSpec, LM_SHAPES
+from repro.data.synthetic import SyntheticDataset
+from repro.models.registry import build_model
+from repro.optim.adamw import OptConfig
+from repro.runtime.train_loop import TrainConfig, Trainer, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--dim", type=int, default=256)
+ap.add_argument("--layers", type=int, default=6)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_moe_e2e")
+args = ap.parse_args()
+
+# ~100M params at the default settings (vocab 8192, d=256, 6 MoE layers
+# of 16 experts): same family as qwen3-30b-a3b, shrunk to CPU scale.
+cfg = ArchConfig(
+    name="moe-100m", family="moe",
+    n_layers=args.layers, d_model=args.dim, n_heads=8, n_kv_heads=4,
+    d_ff=args.dim * 4, d_ff_expert=args.dim * 2, vocab=8192,
+    n_experts=16, top_k=2,
+    pattern=(LayerSpec(mixer="attn", ffn="moe"),),
+    dtype="float32",
+)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+n = sum(x.size for x in jax.tree.leaves(params))
+print(f"model: {n/1e6:.1f}M params ({cfg.n_experts} experts top-{cfg.top_k})")
+
+ds = SyntheticDataset(cfg, LM_SHAPES["train_4k"], seed=0,
+                      batch_override=args.batch, seq_override=args.seq)
+step = make_train_step(
+    model.loss,
+    OptConfig(lr=3e-4, warmup_steps=10, total_steps=args.steps),
+)
+
+crash = {"armed": True}
+
+
+def fault_hook(i):
+    if crash["armed"] and i == min(60, args.steps - 10):
+        crash["armed"] = False
+        raise RuntimeError("injected node failure")
+
+
+trainer = Trainer(
+    step, ds, params,
+    TrainConfig(steps=args.steps, ckpt_every=20, ckpt_dir=args.ckpt_dir,
+                log_every=20),
+    fault_hook=fault_hook,
+)
+history = trainer.run()
+first = sum(h["loss"] for h in history[:5]) / 5
+last = sum(h["loss"] for h in history[-5:]) / 5
+print(f"\nloss {first:.3f} -> {last:.3f} | restarts={trainer.restarts} "
+      f"| steps replayed after crash: yes" if trainer.restarts else "")
+assert last < first, "training failed to reduce loss"
+print("OK: trained through an injected failure with checkpoint recovery")

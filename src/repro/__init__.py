@@ -1,0 +1,5 @@
+"""Perseus-TPU: production-grade JAX/Pallas reproduction of
+"Eliminating Hidden Serialization in Multi-Node Megakernel Communication"
+(Oh & Singh, CS.DC 2026).  See DESIGN.md for the system inventory."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,188 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-k, elastic restore.
+
+Layout::
+
+    <dir>/step_000123/
+        manifest.json        # tree structure, shapes, dtypes, metadata
+        arrays.npz           # flattened leaves (host-local view)
+    <dir>/LATEST             # atomic pointer file
+
+Guarantees:
+  * atomicity — writes go to ``step_N.tmp`` and are renamed only after
+    fsync, so a crash mid-save never corrupts the restore point;
+  * async — ``save`` can offload serialization to a worker thread
+    (``wait()`` joins before the next save or exit);
+  * keep-k GC — old steps beyond ``keep`` are removed after a successful
+    save;
+  * elastic restore — leaves are stored with *global* shapes and restored
+    via ``jax.device_put`` against whatever sharding the new mesh
+    prescribes, so the same checkpoint resumes on a different DP degree
+    (scale-up/scale-down) or a different mesh shape.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import queue
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(_k(k) for k in kp) for kp, _ in flat]
+    leaves = [v for _, v in flat]
+    return paths, leaves, treedef
+
+
+def _k(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        os.makedirs(directory, exist_ok=True)
+        self._q: queue.Queue = queue.Queue()
+        self._worker: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, metadata: dict | None = None):
+        """Snapshot ``tree`` at ``step``. Host-syncs the arrays, then
+        serializes (optionally on a worker thread)."""
+        paths, leaves, _ = _flatten_with_paths(tree)
+        arrays = [np.asarray(x) for x in leaves]   # host sync
+        meta = {
+            "step": step,
+            "paths": paths,
+            "shapes": [list(a.shape) for a in arrays],
+            "dtypes": [str(a.dtype) for a in arrays],
+            "metadata": metadata or {},
+        }
+        if self.async_save:
+            self.wait()
+            self._worker = threading.Thread(
+                target=self._write, args=(step, meta, arrays), daemon=True
+            )
+            self._worker.start()
+        else:
+            self._write(step, meta, arrays)
+
+    def wait(self):
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, step: int, meta: dict, arrays: list[np.ndarray]):
+        try:
+            final = os.path.join(self.dir, f"step_{step:09d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            np.savez(
+                os.path.join(tmp, "arrays.npz"),
+                **{f"a{i}": a for i, a in enumerate(arrays)},
+            )
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(meta, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+                f.write(str(step))
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(
+                os.path.join(self.dir, "LATEST.tmp"),
+                os.path.join(self.dir, "LATEST"),
+            )
+            self._gc()
+        except BaseException as e:   # surfaced on next wait()
+            self._error = e
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(
+                os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True
+            )
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        path = os.path.join(self.dir, "LATEST")
+        if os.path.exists(path):
+            with open(path) as f:
+                s = int(f.read().strip())
+            if os.path.isdir(os.path.join(self.dir, f"step_{s:09d}")):
+                return s
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target_tree: Any, step: int | None = None,
+                *, shardings: Any = None) -> tuple[Any, dict]:
+        """Restore into the structure of ``target_tree``.
+
+        ``shardings`` (optional pytree of NamedSharding) reshards each leaf
+        for the *current* mesh — this is the elastic-scaling path: global
+        shapes in the checkpoint are mesh-independent.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        arrays = [data[f"a{i}"] for i in range(len(meta["paths"]))]
+
+        paths, leaves, treedef = _flatten_with_paths(target_tree)
+        by_path = dict(zip(meta["paths"], arrays))
+        restored = []
+        flat_sh = (jax.tree.leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec"))
+            if shardings is not None else [None] * len(paths))
+        for p, ref, sh in zip(paths, leaves, flat_sh):
+            if p not in by_path:
+                raise KeyError(f"checkpoint missing leaf {p}")
+            a = by_path[p]
+            if list(a.shape) != list(ref.shape):
+                raise ValueError(
+                    f"shape mismatch for {p}: ckpt {a.shape} vs {ref.shape}"
+                )
+            a = a.astype(ref.dtype)
+            restored.append(
+                jax.device_put(a, sh) if sh is not None else jnp.asarray(a)
+            )
+        return treedef.unflatten(restored), meta["metadata"]

@@ -1,0 +1,220 @@
+"""Architecture & shape configuration schema.
+
+Every assigned architecture is one ``ArchConfig`` instance in
+``repro/configs/<id>.py``; the model zoo (`repro.models`) builds the network
+purely from this description, so adding an architecture never touches model
+code.
+
+Layer structure is described as a *pattern*: a short tuple of ``LayerSpec``
+that repeats over the depth (period-1 for homogeneous stacks, e.g. 6 for
+gemma3's 5 local : 1 global attention).  The decoder scans over pattern
+periods with per-slot stacked parameters, which keeps lowering time and HLO
+size O(period), not O(n_layers) — essential for the 512-device dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LayerSpec", "ArchConfig", "ShapeSpec", "LM_SHAPES"]
+
+MixerKind = Literal["attn", "attn_local", "rglru", "ssd", "none"]
+FFNKind = Literal["mlp", "moe", "none"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer slot inside the repeating pattern."""
+
+    mixer: MixerKind = "attn"
+    ffn: FFNKind = "mlp"
+    cross_attn: bool = False          # decoder cross-attends to encoder memory
+    window: int = 0                   # sliding window for attn_local
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm"]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    pattern: tuple[LayerSpec, ...] = (LayerSpec(),)
+    head_dim: int | None = None       # default d_model // n_heads
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0              # per-expert intermediate (d_ff if 0)
+    capacity_factor: float = 1.25
+
+    # SSM (mamba2) / recurrent (RG-LRU)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2               # d_inner = expand * d_model
+    conv_kernel: int = 4
+    rglru_c: float = 8.0
+
+    # encoder-decoder (whisper): encoder layers mirror decoder dims
+    n_encoder_layers: int = 0
+
+    # VLM stub: number of image tokens prepended (precomputed embeddings)
+    n_image_tokens: int = 0
+
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = True
+
+    # ---- performance levers (hillclimbed in EXPERIMENTS.md §Perf) ----
+    attn_chunk: int = 0        # >0: blockwise online-softmax attention
+    loss_chunk: int = 0        # >0: sequence-chunked xent (no full logits)
+    param_dtype: str = "float32"   # "bfloat16": store params in bf16
+
+    # Which technique applies (DESIGN.md §6): EP/megakernel only for MoE.
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(s.mixer in ("rglru", "ssd", "none") for s in self.pattern)
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for long_500k: no full-attention layer... except we allow
+        patterns whose only global attention is a bounded fraction with
+        decode-linear cost (gemma3).  Pure full-attention archs return False.
+        """
+        kinds = {s.mixer for s in self.pattern}
+        if kinds <= {"rglru", "ssd", "none", "attn_local"}:
+            return True
+        # mixed local/global counts if local layers dominate (gemma3 5:1)
+        n_global = sum(1 for s in self.pattern if s.mixer == "attn")
+        return n_global * 2 < len(self.pattern)
+
+    @property
+    def hdim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def expert_ff(self) -> int:
+        return self.d_ff_expert or self.d_ff
+
+    @property
+    def jdtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    def n_periods(self) -> tuple[int, int]:
+        """(full periods, remainder layers)."""
+        p = len(self.pattern)
+        return self.n_layers // p, self.n_layers % p
+
+    def param_count(self) -> int:
+        """Approximate total parameters (embeddings + per-layer)."""
+        H, V = self.d_model, self.vocab
+        total = V * H * (1 if self.tie_embeddings else 2)
+        per_pattern = 0
+        for s in self.pattern:
+            if s.mixer in ("attn", "attn_local"):
+                hd = self.hdim
+                per_pattern += H * (self.n_heads * hd) + 2 * H * (
+                    self.n_kv_heads * hd
+                ) + (self.n_heads * hd) * H
+            elif s.mixer == "rglru":
+                d = self.d_ff // 2 if False else H
+                per_pattern += 2 * H * H + 2 * H * self.conv_kernel + 2 * H
+            elif s.mixer == "ssd":
+                dh, N = self.ssm_head_dim, self.ssm_state
+                inner = self.ssm_expand * H
+                nh = max(1, inner // dh)
+                per_pattern += (
+                    H * (2 * inner + 2 * N + nh)    # in_x/in_z/B/C/dt
+                    + inner * H                      # out proj
+                    + self.conv_kernel * inner       # depthwise conv
+                )
+            if s.cross_attn:
+                hd = self.hdim
+                per_pattern += 2 * H * (self.n_heads * hd) + 2 * H * (
+                    self.n_kv_heads * hd
+                )
+            if s.ffn == "mlp":
+                per_pattern += 3 * H * self.d_ff
+            elif s.ffn == "moe":
+                per_pattern += self.n_experts * 3 * H * self.expert_ff + (
+                    H * self.n_experts
+                )
+        total += per_pattern * self.n_layers / len(self.pattern)
+        total += (self.n_encoder_layers) * (
+            4 * H * H + 3 * H * self.d_ff
+        )
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k of E experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        full = self.param_count()
+        moe_layers = sum(1 for s in self.pattern if s.ffn == "moe")
+        moe_total = (
+            self.n_experts * 3 * self.d_model * self.expert_ff
+            * moe_layers * self.n_layers // len(self.pattern)
+        )
+        moe_active = moe_total * self.top_k // self.n_experts
+        return int(full - moe_total + moe_active)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+LM_SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def reduce_for_smoke(cfg: ArchConfig) -> ArchConfig:
+    """Tiny same-family config for CPU smoke tests (one step, no NaNs)."""
+    period = len(cfg.pattern)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=max(period, min(2 * period, cfg.n_layers)),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) or 1,
+        d_ff=128,
+        d_ff_expert=64 if cfg.is_moe else 0,
+        vocab=256,
+        n_experts=min(cfg.n_experts, 8),
+        top_k=min(cfg.top_k, 2),
+        # drop-free capacity so dense/gathered/EP/decode agree bit-for-bit
+        capacity_factor=8.0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_head_dim=16 if cfg.ssm_state else cfg.ssm_head_dim,
+        n_encoder_layers=min(cfg.n_encoder_layers, 2),
+        n_image_tokens=min(cfg.n_image_tokens, 16),
+        head_dim=16,
+        pattern=tuple(
+            dataclasses.replace(s, window=min(s.window, 32) if s.window else 0)
+            for s in cfg.pattern
+        ),
+        dtype="float32",
+    )

@@ -1,0 +1,17 @@
+"""dbrx-132b: 16-expert top-4 fine-grained MoE (hf:databricks/dbrx-base)."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    d_ff_expert=10752,
+    vocab=100352,
+    n_experts=16,
+    top_k=4,
+    pattern=(LayerSpec(mixer="attn", ffn="moe"),),
+)

@@ -1,0 +1,17 @@
+"""Paper Table 1: DeepSeek-V3 — 256 experts top-8."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="deepseek-v3",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=2048,
+    d_ff_expert=2048,
+    vocab=129280,
+    n_experts=256,
+    top_k=8,
+    pattern=(LayerSpec(mixer="attn", ffn="moe"),),
+)

@@ -1,0 +1,19 @@
+"""gemma3-27b: 5:1 local:global attention, 128k context (hf:google/gemma-3)."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+_LOCAL = LayerSpec(mixer="attn_local", ffn="mlp", window=1024)
+_GLOBAL = LayerSpec(mixer="attn", ffn="mlp")
+
+CONFIG = ArchConfig(
+    name="gemma3-27b",
+    family="dense",
+    n_layers=62,
+    d_model=5376,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab=262144,
+    pattern=(_LOCAL, _LOCAL, _LOCAL, _LOCAL, _LOCAL, _GLOBAL),
+    rope_theta=1e6,
+)

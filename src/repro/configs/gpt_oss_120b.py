@@ -1,0 +1,17 @@
+"""Paper Table 1: GPT-OSS-120B — the balanced MoE."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="gpt-oss-120b",
+    family="moe",
+    n_layers=36,
+    d_model=2880,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=2880,
+    d_ff_expert=2880,
+    vocab=201088,
+    n_experts=128,
+    top_k=4,
+    pattern=(LayerSpec(mixer="attn", ffn="moe"),),
+)

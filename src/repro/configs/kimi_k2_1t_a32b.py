@@ -1,0 +1,17 @@
+"""kimi-k2-1t-a32b: trillion-parameter MoE, 384 experts top-8 (arXiv:2501.kimi2)."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=2048,
+    d_ff_expert=2048,
+    vocab=163840,
+    n_experts=384,
+    top_k=8,
+    pattern=(LayerSpec(mixer="attn", ffn="moe"),),
+)

@@ -1,0 +1,16 @@
+"""llava-next-34b: VLM; anyres vision tiling is a STUB — the driver feeds
+precomputed patch embeddings as a prefix (hf:llava-hf/llava-v1.6)."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab=64000,
+    n_image_tokens=2880,     # anyres: base 576 + 4 tiles x 576
+    pattern=(LayerSpec(mixer="attn", ffn="mlp"),),
+)

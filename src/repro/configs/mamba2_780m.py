@@ -1,0 +1,16 @@
+"""mamba2-780m: attention-free SSD (state-space duality), arXiv:2405.21060."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="mamba2-780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,          # nominal (attention-free)
+    n_kv_heads=24,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    pattern=(LayerSpec(mixer="ssd", ffn="none"),),
+)

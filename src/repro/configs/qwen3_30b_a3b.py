@@ -1,0 +1,17 @@
+"""Paper Table 1: Qwen3-30B-A3B — the communication-bound MoE."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="qwen3-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=768,
+    d_ff_expert=768,
+    vocab=151936,
+    n_experts=128,
+    top_k=8,
+    pattern=(LayerSpec(mixer="attn", ffn="moe"),),
+)

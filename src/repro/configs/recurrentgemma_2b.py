@@ -1,0 +1,19 @@
+"""recurrentgemma-2b: RG-LRU + local attention, 1 attn : 2 recurrent
+(arXiv:2402.19427)."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+_REC = LayerSpec(mixer="rglru", ffn="mlp")
+_LOCAL = LayerSpec(mixer="attn_local", ffn="mlp", window=2048)
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab=256000,
+    pattern=(_REC, _REC, _LOCAL),
+)

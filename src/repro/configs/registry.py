@@ -1,0 +1,69 @@
+"""Architecture registry: ``--arch <id>`` resolution + shape assignment."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, LM_SHAPES, ShapeSpec
+
+__all__ = [
+    "ASSIGNED", "PAPER_OWN", "ALL_ARCHS", "get_config", "shape_cells",
+    "cell_supported",
+]
+
+# The 10 assigned architectures (system-prompt pool) — module name per id.
+ASSIGNED = {
+    "dbrx-132b": "dbrx_132b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "mamba2-780m": "mamba2_780m",
+    "granite-8b": "granite_8b",
+    "gemma3-27b": "gemma3_27b",
+    "internlm2-20b": "internlm2_20b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "whisper-tiny": "whisper_tiny",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "llava-next-34b": "llava_next_34b",
+}
+
+# The paper's own evaluation models (Table 1).
+PAPER_OWN = {
+    "qwen3-30b-a3b": "qwen3_30b_a3b",
+    "gpt-oss-120b": "gpt_oss_120b",
+    "deepseek-v3": "deepseek_v3",
+}
+
+ALL_ARCHS = {**ASSIGNED, **PAPER_OWN}
+
+
+def get_config(name: str) -> ArchConfig:
+    try:
+        mod = ALL_ARCHS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; known: {sorted(ALL_ARCHS)}"
+        ) from None
+    return importlib.import_module(f"repro.configs.{mod}").CONFIG
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether an (arch x shape) cell runs, with the skip reason if not.
+
+    Skips per the assignment: ``long_500k`` only for sub-quadratic archs;
+    decode shapes skipped for encoder-only archs (none assigned here —
+    whisper is enc-dec and *does* decode).
+    """
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, (
+            "pure full-attention arch: 500k-token decode requires "
+            "sub-quadratic attention (DESIGN.md §6)"
+        )
+    return True, ""
+
+
+def shape_cells(arch: str) -> list[tuple[ShapeSpec, bool, str]]:
+    cfg = get_config(arch)
+    out = []
+    for shape in LM_SHAPES.values():
+        ok, why = cell_supported(cfg, shape)
+        out.append((shape, ok, why))
+    return out

@@ -1,0 +1,17 @@
+"""whisper-tiny: enc-dec audio backbone; conv frontend is a STUB — the
+driver feeds precomputed frame embeddings (arXiv:2212.04356)."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,              # decoder layers
+    n_encoder_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab=51865,
+    pattern=(LayerSpec(mixer="attn", ffn="mlp", cross_attn=True),),
+    tie_embeddings=True,
+)

@@ -1,0 +1,14 @@
+"""The paper's contribution: Perseus signaling protocol, calibrated
+proxy/NIC transport simulator, and the expert-parallel MoE block."""
+
+from repro.core.moe import MoEConfig, init_moe, moe_apply
+from repro.core.routing import expert_capacity, topk_routing
+from repro.core.signaling import (
+    Schedule, ScheduleKind, Transfer, build_schedule, fence_count,
+    moe_dispatch_transfers, optimal_group_size,
+)
+from repro.core.transport_sim import (
+    IBGDA, IBRC, LIBFABRIC, NVLINK, TRANSPORTS,
+    signaling_efficiency, simulate_forward, simulate_moe_layer,
+    simulate_proxy,
+)

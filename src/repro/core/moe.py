@@ -1,0 +1,312 @@
+"""Expert-parallel Mixture-of-Experts block (the paper's workload).
+
+Backends (selectable per call, identical numerics up to dispatch order):
+
+  ``dense``       — oracle: every expert computes every token, outputs are
+                    gate-weighted.  O(E) compute; used as the correctness
+                    reference for everything else.
+  ``gathered``    — single-device capacity dispatch (scatter -> expert
+                    GEMMs -> combine).  This is what each EP rank runs
+                    locally on its shard.
+  ``collective``  — expert parallelism under ``shard_map``: capacity
+                    dispatch + ``jax.lax.all_to_all`` (the bulk-synchronous
+                    NCCL-style baseline in the paper, §2.2) + expert
+                    compute + reverse all_to_all.
+  ``megakernel``  — expert parallelism where dispatch/combine are the
+                    Pallas remote-DMA kernel with a Perseus signaling
+                    schedule (`repro.kernels.moe_dispatch`) — the paper's
+                    fine-grained overlapped path, TPU-native.
+
+All backends share `topk_routing`, so token->expert assignment (including
+capacity drops) is bit-identical and outputs can be compared directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.routing import RoutingInfo, expert_capacity, topk_routing
+
+__all__ = ["MoEParams", "MoEConfig", "init_moe", "moe_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                   # per-expert intermediate size
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    activation: str = "silu"    # silu (gated) | gelu (gated)
+    dtype: Any = jnp.bfloat16
+    # EP settings (collective/megakernel backends):
+    ep_axis: str = "model"
+    # mesh axes the token dim is sharded over (EP axis must be last):
+    token_axes: tuple[str, ...] = ("data", "model")
+    # megakernel signaling schedule: coupled | decoupled | nic_ordered | perseus
+    schedule: str = "perseus"
+
+
+# Pytree: {'w_gate': (H,E), 'w1': (E,H,F), 'w3': (E,H,F), 'w2': (E,F,H)}.
+MoEParams = dict
+
+
+def init_moe(key: jax.Array, cfg: MoEConfig) -> MoEParams:
+    kg, k1, k2, k3 = jax.random.split(key, 4)
+    H, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s_in = 1.0 / np.sqrt(H)
+    s_ff = 1.0 / np.sqrt(F)
+    return MoEParams(
+        w_gate=(jax.random.normal(kg, (H, E)) * s_in).astype(jnp.float32),
+        w1=(jax.random.normal(k1, (E, H, F)) * s_in).astype(cfg.dtype),
+        w3=(jax.random.normal(k3, (E, H, F)) * s_in).astype(cfg.dtype),
+        w2=(jax.random.normal(k2, (E, F, H)) * s_ff).astype(cfg.dtype),
+    )
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def _expert_ffn(x: jax.Array, w1, w3, w2, activation: str) -> jax.Array:
+    """Gated MLP for one expert: (T,H) -> (T,H).  3 GEMMs (paper's x6 factor)."""
+    h = _act(x @ w1, activation) * (x @ w3)
+    return h @ w2
+
+
+# ---------------------------------------------------------------------------
+# dense oracle
+# ---------------------------------------------------------------------------
+
+
+def moe_dense(params: MoEParams, cfg: MoEConfig, x: jax.Array) -> jax.Array:
+    """Reference: run all experts on all tokens; honors capacity drops."""
+    T = x.shape[0]
+    logits = x.astype(jnp.float32) @ params["w_gate"]
+    cap = expert_capacity(T, cfg.n_experts, cfg.top_k, cfg.capacity_factor)
+    info = topk_routing(logits, cfg.top_k, cap)
+    outs = jax.vmap(
+        lambda w1, w3, w2: _expert_ffn(
+            x.astype(cfg.dtype), w1, w3, w2, cfg.activation
+        )
+    )(params["w1"], params["w3"], params["w2"])           # (E, T, H)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for slot in range(cfg.top_k):
+        e = info.expert_idx[:, slot]                      # (T,)
+        w = info.weight[:, slot] * info.keep[:, slot]     # (T,)
+        picked = jnp.take_along_axis(
+            outs, e[None, :, None], axis=0
+        )[0]                                              # (T, H)
+        y = y + w[:, None].astype(jnp.float32) * picked.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gathered single-device dispatch (also the per-rank body for EP)
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_to_buffers(
+    x: jax.Array, info: RoutingInfo, n_experts: int, capacity: int
+) -> jax.Array:
+    """Scatter tokens into (E, C, H) capacity buffers."""
+    T, H = x.shape
+    k = info.expert_idx.shape[1]
+    flat_idx = (
+        info.expert_idx * capacity + jnp.minimum(info.position, capacity - 1)
+    ).reshape(-1)                                          # (T*k,)
+    keep = info.keep.reshape(-1)
+    src = jnp.repeat(x, k, axis=0) * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((n_experts * capacity, H), dtype=x.dtype)
+    # Dropped slots all collapse onto position capacity-1 with zero payload.
+    safe_idx = jnp.where(keep, flat_idx, n_experts * capacity - 1)
+    buf = buf.at[safe_idx].add(src, mode="drop")
+    return buf.reshape(n_experts, capacity, H)
+
+
+def _combine_from_buffers(
+    expert_out: jax.Array,  # (E, C, H)
+    info: RoutingInfo,
+    capacity: int,
+    out_dtype,
+) -> jax.Array:
+    T, k = info.expert_idx.shape
+    flat_idx = (
+        info.expert_idx * capacity + jnp.minimum(info.position, capacity - 1)
+    ).reshape(-1)
+    gathered = expert_out.reshape(-1, expert_out.shape[-1])[flat_idx]
+    gathered = gathered.reshape(T, k, -1).astype(jnp.float32)
+    w = (info.weight * info.keep).astype(jnp.float32)      # (T, k)
+    return jnp.einsum("tkh,tk->th", gathered, w).astype(out_dtype)
+
+
+def moe_gathered(
+    params: MoEParams, cfg: MoEConfig, x: jax.Array
+) -> jax.Array:
+    """Single-device capacity dispatch -> batched expert GEMMs -> combine."""
+    T = x.shape[0]
+    logits = x.astype(jnp.float32) @ params["w_gate"]
+    cap = expert_capacity(T, cfg.n_experts, cfg.top_k, cfg.capacity_factor)
+    info = topk_routing(logits, cfg.top_k, cap)
+    buf = _dispatch_to_buffers(x.astype(cfg.dtype), info, cfg.n_experts, cap)
+    out = jax.vmap(
+        lambda xb, w1, w3, w2: _expert_ffn(xb, w1, w3, w2, cfg.activation)
+    )(buf, params["w1"], params["w3"], params["w2"])       # (E, C, H)
+    return _combine_from_buffers(out, info, cap, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel backends (shard_map over the EP axis)
+# ---------------------------------------------------------------------------
+
+
+def _ep_body(
+    params_local: MoEParams,
+    x_local: jax.Array,         # (T_local, H) this rank's tokens
+    cfg: MoEConfig,
+    *,
+    backend: str,
+) -> jax.Array:
+    """Per-rank EP body. params_local holds E/P experts; gate is replicated."""
+    ep = cfg.ep_axis
+    n_ranks = jax.lax.axis_size(ep)
+    E, k = cfg.n_experts, cfg.top_k
+    e_local = E // n_ranks
+    T_local = x_local.shape[0]
+
+    logits = x_local.astype(jnp.float32) @ params_local["w_gate"]
+    # Capacity per (source rank, expert): each source contributes up to C.
+    cap = expert_capacity(T_local, E, k, cfg.capacity_factor)
+    info = topk_routing(logits, k, cap)
+
+    # (E, C, H) send buffers, grouped by destination rank:
+    buf = _dispatch_to_buffers(x_local.astype(cfg.dtype), info, E, cap)
+    buf = buf.reshape(n_ranks, e_local, cap, -1)           # (P, e, C, H)
+
+    if backend == "collective":
+        # Bulk-synchronous ALLTOALL (the NCCL-style baseline).
+        recv = jax.lax.all_to_all(
+            buf, ep, split_axis=0, concat_axis=0, tiled=False
+        )                                                  # (P, e, C, H)
+    elif backend == "megakernel":
+        from repro.kernels import moe_dispatch as mk
+
+        recv = mk.remote_dispatch(
+            buf, axis_name=ep, schedule=cfg.schedule
+        )                                                  # (P, e, C, H)
+    else:
+        raise ValueError(backend)
+
+    # Expert compute on everything we received: (e, P*C, H)
+    xin = recv.transpose(1, 0, 2, 3).reshape(e_local, n_ranks * cap, -1)
+    out = jax.vmap(
+        lambda xb, w1, w3, w2: _expert_ffn(xb, w1, w3, w2, cfg.activation)
+    )(xin, params_local["w1"], params_local["w3"], params_local["w2"])
+    out = out.reshape(e_local, n_ranks, cap, -1).transpose(1, 0, 2, 3)
+
+    if backend == "collective":
+        back = jax.lax.all_to_all(
+            out, ep, split_axis=0, concat_axis=0, tiled=False
+        )
+    else:
+        from repro.kernels import moe_dispatch as mk
+
+        back = mk.remote_dispatch(out, axis_name=ep, schedule=cfg.schedule)
+
+    back = back.reshape(E, cap, -1)
+    return _combine_from_buffers(back, info, cap, x_local.dtype)
+
+
+def _ep_body_replicated(
+    params_local: MoEParams,
+    x_local: jax.Array,         # (T_local, H); replicated over the EP axis
+    cfg: MoEConfig,
+) -> jax.Array:
+    """EP for tiny token counts (decode): every EP rank sees all tokens of
+    its data shard, computes only *its* experts' contributions, and the
+    results are summed over the EP axis — an all-reduce instead of two
+    all-to-alls (the standard decode-time EP layout)."""
+    ep = cfg.ep_axis
+    n_ranks = jax.lax.axis_size(ep)
+    rank = jax.lax.axis_index(ep)
+    E, k = cfg.n_experts, cfg.top_k
+    e_local = E // n_ranks
+    T = x_local.shape[0]
+
+    logits = x_local.astype(jnp.float32) @ params_local["w_gate"]
+    cap = expert_capacity(T, E, k, cfg.capacity_factor)
+    info = topk_routing(logits, k, cap)
+    buf = _dispatch_to_buffers(x_local.astype(cfg.dtype), info, E, cap)
+    local = jax.lax.dynamic_slice_in_dim(buf, rank * e_local, e_local, axis=0)
+    out = jax.vmap(
+        lambda xb, w1, w3, w2: _expert_ffn(xb, w1, w3, w2, cfg.activation)
+    )(local, params_local["w1"], params_local["w3"], params_local["w2"])
+    full = jnp.zeros((E, cap, x_local.shape[-1]), dtype=out.dtype)
+    full = jax.lax.dynamic_update_slice_in_dim(
+        full, out, rank * e_local, axis=0
+    )
+    y = _combine_from_buffers(full, info, cap, jnp.float32)
+    y = jax.lax.psum(y, ep)
+    return y.astype(x_local.dtype)
+
+
+def moe_apply(
+    params: MoEParams,
+    cfg: MoEConfig,
+    x: jax.Array,
+    *,
+    backend: str = "gathered",
+    mesh: Mesh | None = None,
+    tokens_spec: P | None = None,
+) -> jax.Array:
+    """Apply the MoE block.
+
+    ``collective``/``megakernel``: ``x`` is (T, H) with T sharded over
+    ``cfg.token_axes`` (EP all_to_all runs over the last axis).
+    ``replicated``: T sharded over the non-EP token axes only; the EP axis
+    contributes a psum (decode-time layout).  Expert weights are sharded
+    over their leading (expert) axis; the gate is replicated.
+    """
+    if backend == "dense":
+        return moe_dense(params, cfg, x)
+    if backend == "gathered":
+        return moe_gathered(params, cfg, x)
+    if backend not in ("collective", "megakernel", "replicated"):
+        raise ValueError(backend)
+
+    ep = cfg.ep_axis
+    param_specs = MoEParams(
+        w_gate=P(),
+        w1=P(ep), w3=P(ep), w2=P(ep),
+    )
+    if backend == "replicated":
+        dp_axes = tuple(a for a in cfg.token_axes if a != ep)
+        tokens_spec = (
+            tokens_spec if tokens_spec is not None
+            else P(dp_axes if dp_axes else None)
+        )
+        body = functools.partial(_ep_body_replicated, cfg=cfg)
+    else:
+        tokens_spec = (
+            tokens_spec if tokens_spec is not None else P(cfg.token_axes)
+        )
+        body = functools.partial(_ep_body, cfg=cfg, backend=backend)
+    mapped = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(param_specs, tokens_spec),
+        out_specs=tokens_spec,
+        check_vma=False,
+    )
+    return mapped(params, x)

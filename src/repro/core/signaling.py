@@ -1,0 +1,275 @@
+"""Signaling protocol schedules for megakernel expert dispatch.
+
+This module is the *protocol layer* of the paper: it turns a logical
+dispatch (a set of per-expert tile transfers to remote PEs) into the exact
+stream of work requests the transport sees.  The four schedules mirror
+Figure 2 / Figure 6 of the paper:
+
+  ``coupled``      — vanilla PUT-WITH-SIGNAL: every transfer expands to
+                     PUT -> proxy FENCE -> SIGNAL (one proxy drain per expert).
+  ``decoupled``    — Perseus Algorithm 1: all PUTs submitted back-to-back,
+                     then per destination *group* one proxy FENCE followed by
+                     the group's SIGNALs (fence count = #groups).
+  ``nic_ordered``  — coupled ordering but the fence is a NIC-side flag on the
+                     SIGNAL work request (``FI_FENCE``/``IBV_SEND_FENCE``):
+                     the proxy never blocks, the NIC defers the flagged WQE.
+  ``perseus``      — both: all PUTs, then per group a single *flagged* SIGNAL
+                     followed by the group's remaining plain SIGNALs.
+
+The same schedule objects drive (a) the discrete-event transport simulator
+(`transport_sim.py`) that reproduces the paper's performance results, and
+(b) the Pallas TPU megakernel (`repro.kernels.moe_dispatch`), where a proxy
+FENCE maps to a full send-semaphore drain and a NIC flag maps to the
+hardware-coupled receive semaphore of the ICI DMA engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Iterable, Sequence
+
+__all__ = [
+    "OpKind",
+    "Op",
+    "Transfer",
+    "Schedule",
+    "ScheduleKind",
+    "build_schedule",
+    "group_by_destination",
+    "fence_count",
+    "optimal_group_size",
+]
+
+
+class OpKind(enum.Enum):
+    PUT = "put"
+    FENCE = "fence"           # proxy-side fence: drain all in-flight WRs
+    SIGNAL = "signal"         # plain signal (small write)
+    SIGNAL_FENCED = "signalF"  # signal carrying the NIC fence flag
+
+
+class ScheduleKind(str, enum.Enum):
+    COUPLED = "coupled"
+    DECOUPLED = "decoupled"
+    NIC_ORDERED = "nic_ordered"
+    PERSEUS = "perseus"
+    PUT_ONLY = "put_only"      # microbenchmark upper bound (Fig. 5a)
+
+
+@dataclasses.dataclass(frozen=True)
+class Transfer:
+    """One logical tile transfer: tokens for one (remote) expert."""
+
+    tag: int          # unique id; receivers wait on this tag's signal
+    dest_pe: int      # destination processing element (global rank)
+    nbytes: int       # payload size
+    dest_node: int    # destination node (for intra/inter-node split)
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    kind: OpKind
+    dest_pe: int = -1
+    nbytes: int = 0
+    tag: int = -1
+    dest_node: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    kind: ScheduleKind
+    ops: tuple[Op, ...]
+    group_size: int
+    n_transfers: int
+
+    @property
+    def n_fences(self) -> int:
+        return sum(
+            1
+            for o in self.ops
+            if o.kind in (OpKind.FENCE, OpKind.SIGNAL_FENCED)
+        )
+
+    @property
+    def n_proxy_fences(self) -> int:
+        return sum(1 for o in self.ops if o.kind is OpKind.FENCE)
+
+
+def group_by_destination(
+    transfers: Sequence[Transfer], group_size: int | None
+) -> list[list[Transfer]]:
+    """Group transfers for fence amortization.
+
+    ``group_size is None`` selects the paper's default *per-PE grouping*: one
+    group per destination PE (§4.1, "Perseus defaults to per-PE grouping").
+    Otherwise transfers are grouped destination-major in chunks of
+    ``group_size`` (the tunable swept in Fig. 7).
+    """
+    by_dest: dict[int, list[Transfer]] = {}
+    for t in transfers:
+        by_dest.setdefault(t.dest_pe, []).append(t)
+    ordered = [t for dest in sorted(by_dest) for t in by_dest[dest]]
+    if group_size is None:
+        return [by_dest[d] for d in sorted(by_dest)]
+    group_size = max(1, int(group_size))
+    return [
+        list(ordered[i : i + group_size])
+        for i in range(0, len(ordered), group_size)
+    ]
+
+
+def _put(t: Transfer) -> Op:
+    return Op(OpKind.PUT, t.dest_pe, t.nbytes, t.tag, t.dest_node)
+
+
+def _sig(t: Transfer, fenced: bool) -> Op:
+    kind = OpKind.SIGNAL_FENCED if fenced else OpKind.SIGNAL
+    return Op(kind, t.dest_pe, 0, t.tag, t.dest_node)
+
+
+def build_schedule(
+    transfers: Sequence[Transfer],
+    kind: ScheduleKind | str,
+    *,
+    group_size: int | None = None,
+) -> Schedule:
+    """Expand logical transfers into the proxy-FIFO op stream.
+
+    ``group_size`` only affects the decoupled/perseus schedules; ``None``
+    means per-PE grouping (paper default).
+    """
+    kind = ScheduleKind(kind)
+    ops: list[Op] = []
+    transfers = list(transfers)
+
+    if kind is ScheduleKind.PUT_ONLY:
+        ops = [_put(t) for t in transfers]
+
+    elif kind is ScheduleKind.COUPLED:
+        # Vanilla NVSHMEM putmem_signal_nbi expansion (Fig. 2a / Fig. 6a).
+        for t in transfers:
+            ops.append(_put(t))
+            ops.append(Op(OpKind.FENCE))
+            ops.append(_sig(t, fenced=False))
+
+    elif kind is ScheduleKind.NIC_ORDERED:
+        # Fig. 2c: proxy never blocks; every signal carries the NIC flag.
+        for t in transfers:
+            ops.append(_put(t))
+            ops.append(_sig(t, fenced=True))
+
+    elif kind is ScheduleKind.DECOUPLED:
+        # Fig. 2b / Algorithm 1: phase 1 = all PUTs, phase 2 = per group
+        # (proxy FENCE, then the group's signals).
+        groups = group_by_destination(transfers, group_size)
+        for g in groups:
+            ops.extend(_put(t) for t in g)
+        for g in groups:
+            ops.append(Op(OpKind.FENCE))
+            ops.extend(_sig(t, fenced=False) for t in g)
+
+    elif kind is ScheduleKind.PERSEUS:
+        # Fig. 2d: all PUTs; only the first signal per group is flagged.
+        # The NIC flag orders only within a peer's QP (§5 peer-hash
+        # pinning), so when a tuned group spans multiple destinations the
+        # flag must be carried by the first signal of each *destination*
+        # within the group (per-PE default groups have exactly one).
+        groups = group_by_destination(transfers, group_size)
+        for g in groups:
+            ops.extend(_put(t) for t in g)
+        for g in groups:
+            flagged_dests: set[int] = set()
+            for t in g:
+                first = t.dest_pe not in flagged_dests
+                flagged_dests.add(t.dest_pe)
+                ops.append(_sig(t, fenced=first))
+
+    else:  # pragma: no cover
+        raise ValueError(f"unknown schedule kind {kind}")
+
+    gsz = group_size if group_size is not None else -1  # -1 == per-PE
+    return Schedule(kind, tuple(ops), gsz, len(transfers))
+
+
+def fence_count(
+    n_transfers: int, kind: ScheduleKind | str, group_size: int | None,
+    n_dest: int,
+) -> int:
+    """Closed-form fence count (proxy fences + flagged signals).
+
+    For PERSEUS with an explicit ``group_size`` whose groups span several
+    destinations, the true flag count depends on the destination layout
+    (one flag per distinct destination per group) — this returns the
+    per-PE-grouping lower bound; use ``Schedule.n_fences`` for exact counts.
+    """
+    kind = ScheduleKind(kind)
+    if kind in (ScheduleKind.COUPLED, ScheduleKind.NIC_ORDERED):
+        return n_transfers
+    if kind is ScheduleKind.PERSEUS and group_size is not None:
+        return max(n_dest, math.ceil(n_transfers / max(1, group_size)))
+    if kind in (ScheduleKind.DECOUPLED, ScheduleKind.PERSEUS):
+        if group_size is None:
+            return n_dest
+        return math.ceil(n_transfers / max(1, group_size))
+    return 0
+
+
+def optimal_group_size(
+    n_transfers: int,
+    drain_base_us: float,
+    per_put_wait_us: float,
+) -> int:
+    """Beyond-paper extension: analytic group-size knee.
+
+    Total fence cost for group size g ~ (N/g)*drain_base + N*per_put_wait*g/2
+    (each fence waits on ~g/2 residual in-flight PUTs).  Minimizing over g
+    gives g* = sqrt(2*N*drain_base / (N*per_put_wait)).  The paper sweeps
+    this empirically (Fig. 7) and fixes per-PE grouping; we expose the
+    analytic knee so the runtime can adapt to (S, nodes) without a sweep.
+    """
+    if per_put_wait_us <= 0:
+        return n_transfers
+    g = math.sqrt(2.0 * drain_base_us / per_put_wait_us)
+    return max(1, min(n_transfers, int(round(g))))
+
+
+def moe_dispatch_transfers(
+    *,
+    my_pe: int,
+    n_pe: int,
+    pe_per_node: int,
+    n_experts: int,
+    bytes_per_expert: int | Sequence[int],
+) -> list[Transfer]:
+    """Transfers one PE issues for one MoE dispatch phase.
+
+    Each PE hosts E/P experts and sends one tile per *remote* expert
+    (intra-node traffic rides NVLink/ICI-local and bypasses the proxy), i.e.
+    (P - P_local) * (E/P) transfers (§3.2) — 96 in the paper's running
+    Qwen3-30B example (4 nodes x 4 GPUs, 128 experts).
+    """
+    if n_experts % n_pe:
+        raise ValueError(f"E={n_experts} not divisible by P={n_pe}")
+    e_per_pe = n_experts // n_pe
+    my_node = my_pe // pe_per_node
+    transfers = []
+    tag = 0
+    for pe in range(n_pe):
+        if pe == my_pe:
+            continue
+        node = pe // pe_per_node
+        if node == my_node:
+            continue  # NVLink path: no proxy involvement
+        for _e in range(e_per_pe):
+            nb = (
+                bytes_per_expert
+                if isinstance(bytes_per_expert, int)
+                else int(bytes_per_expert[tag % len(bytes_per_expert)])
+            )
+            transfers.append(
+                Transfer(tag=tag, dest_pe=pe, nbytes=nb, dest_node=node)
+            )
+            tag += 1
+    return transfers

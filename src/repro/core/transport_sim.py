@@ -1,0 +1,810 @@
+"""Discrete-event simulator of the proxy-based RDMA submission path.
+
+This is the *performance half* of the reproduction (DESIGN.md §2): a
+calibrated model of the GPU -> proxy FIFO -> NIC -> wire pipeline of
+NVSHMEM-style device-initiated RDMA, faithful to §3 of the paper:
+
+  * a single proxy thread drains one FIFO of work requests (WRs) in order,
+    paying a fixed submission cost per WR;
+  * a proxy FENCE blocks the proxy until every in-flight PUT on the channel
+    has returned a *completion* from the NIC (``fi_cntr_wait`` /
+    ``check_poll_avail``), and the drain cost grows with node count and
+    message size (Fig. 5b);
+  * a NIC-side fence flag (``FI_FENCE`` / ``IBV_SEND_FENCE``) instead defers
+    the flagged WR inside the NIC until prior WRs on the *same QP* complete:
+    the NIC pipeline stalls but the proxy keeps submitting (Fig. 2c);
+  * on multi-QP transports, ordering only holds within a QP, so Perseus pins
+    all WRs for a peer to ``qp = pe % num_qp`` (§5).
+
+Calibration: the free constants in the ``LIBFABRIC`` / ``IBRC`` / ``IBGDA``
+presets are fitted to the paper's measured anchors (Fig. 5b aggregate fence
+times, Fig. 5a 2% signaling-efficiency collapse, Appendix A alpha/beta fits)
+and every paper figure is re-derived from the *mechanism*, not hard-coded —
+see ``benchmarks/`` for the per-figure drivers and ``tests/test_paper_claims``
+for the tolerance bands.
+
+Times are microseconds, sizes bytes, bandwidths GB/s (== bytes/us / 1e3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable, Iterable, Sequence
+
+from repro.core.signaling import (
+    Op,
+    OpKind,
+    Schedule,
+    ScheduleKind,
+    Transfer,
+    build_schedule,
+    group_by_destination,
+    moe_dispatch_transfers,
+)
+
+__all__ = [
+    "TransportParams",
+    "LIBFABRIC",
+    "IBRC",
+    "IBGDA",
+    "NVLINK",
+    "TRANSPORTS",
+    "SimResult",
+    "simulate_proxy",
+    "signaling_efficiency",
+    "GpuParams",
+    "A100",
+    "H100",
+    "MoEModelSpec",
+    "QWEN3_30B",
+    "GPT_OSS_120B",
+    "DEEPSEEK_V3",
+    "LLAMA4_SCOUT",
+    "PAPER_MODELS",
+    "LayerResult",
+    "simulate_moe_layer",
+    "simulate_forward",
+    "alltoall_transfers",
+    "simulate_alltoall",
+    "nccl_alltoall_latency",
+    "fit_alpha_beta",
+]
+
+
+# --------------------------------------------------------------------------
+# Transport parameterization
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportParams:
+    """Timing model of one device-initiated RDMA submission path."""
+
+    name: str
+    proxy_submit_us: float        # proxy cost to forward one WR to the NIC
+    wire_GBps: float              # NIC egress bandwidth
+    alpha_us: float               # one-way data latency (last byte -> visible)
+    # Completion (ACK) latency seen by a *proxy fence*:
+    #   ack(n_nodes, nbytes) = ack_base_us * n_nodes**ack_node_exp
+    #                          + ack_bytes_frac(n) * nbytes / wire
+    # The node exponent captures the destination-count tail of the drain
+    # (§3.3 "a single fence's drain grows with node count"); the bytes term
+    # captures the receiver-side PCIe write + ACK serialization.
+    ack_base_us: float
+    ack_node_exp: float
+    ack_bytes_frac0: float
+    ack_bytes_frac_node: float
+    drain_poll_us: float          # software cost of one drain even when empty
+    nic_fence_us: float           # NIC-side cost to honor a fence flag
+    signal_wire_us: float         # wire occupancy of an 8B signal
+    signal_submit_us: float = 0.25  # tiny inline WQE; cheaper than a PUT WR
+    num_qp: int = 1
+    gpu_submit_us: float = 0.0    # GPU-direct WQE submission (IBGDA)
+    proxy: bool = True            # False => GPU-direct path
+    sm_interference: float = 0.0  # compute slowdown from GPU-side submission
+    # NIC-direct transports order put->signal inside a QP for free:
+    inqp_ordering_free: bool = False
+
+    def ack_us(self, n_nodes: int, nbytes: int) -> float:
+        """Software-visible completion latency (what a *proxy drain* waits on).
+
+        ``fi_cntr_wait`` / ``check_poll_avail`` sync a software counter with
+        the NIC; the cost grows with fabric diameter / destination tail
+        (node exponent) and with message size (receiver PCIe write + ACK).
+        """
+        frac = self.ack_bytes_frac0 + self.ack_bytes_frac_node * n_nodes
+        n = max(1, n_nodes)
+        if n <= 8:
+            node_factor = n ** self.ack_node_exp
+        else:
+            # Fig. 5b measures 2-8 nodes; beyond that the dragonfly diameter
+            # stops growing (3 hops worst case) and the tail saturates.
+            node_factor = (8 ** self.ack_node_exp) * (n / 8) ** 0.45
+        return (
+            self.ack_base_us * node_factor
+            + frac * nbytes / (self.wire_GBps * 1e3)
+        )
+
+    def hw_completion_us(self, nbytes: int) -> float:
+        """Hardware-internal completion (what a *NIC fence flag* waits on).
+
+        The NIC tracks prior-WR completion "through internal hardware
+        registers rather than a software counter" (§4.2) — an ACK round trip,
+        independent of node count and far cheaper than the software drain.
+        """
+        return 2.0 * self.alpha_us + 0.1 * nbytes / (self.wire_GBps * 1e3)
+
+    def wire_us(self, nbytes: int) -> float:
+        return nbytes / (self.wire_GBps * 1e3)
+
+
+# Calibrated to Perlmutter measurements in the paper: Fig. 5b gives
+# per-fence drain ~10us @2 nodes -> ~63us @8 nodes for 4KB messages
+# (0.96ms and 6.1ms aggregate over 96 transfers) and ~36us -> ~96us for 1MB,
+# which fixes (ack_base, ack_node_exp) = (3.97, 1.333) and the bytes
+# fractions below.  200 Gb/s Slingshot-11 => 25 GB/s.
+LIBFABRIC = TransportParams(
+    name="libfabric",
+    proxy_submit_us=1.0,
+    wire_GBps=25.0,
+    alpha_us=2.5,
+    ack_base_us=3.97,
+    ack_node_exp=1.333,
+    ack_bytes_frac0=0.6,
+    ack_bytes_frac_node=0.025,
+    drain_poll_us=2.0,
+    nic_fence_us=0.5,
+    signal_wire_us=0.05,
+    num_qp=1,
+)
+
+# ConnectX-7 IBRC: hardware CQ polling makes the fixed drain cheap
+# ("alpha is inherently small (1-5 ms) because hardware completion queue
+# polling is lightweight", App. A) but per-put fences stop cross-QP
+# pipelining, inflating the effective per-byte cost (beta) by ~2.5x — the
+# ack_bytes_frac=1.5 anchor reproduces the paper's "beta reduced by up to
+# 60%" once Perseus restores pipelining.  InfiniBand NDR => 50 GB/s.
+IBRC = TransportParams(
+    name="ibrc",
+    proxy_submit_us=0.7,
+    wire_GBps=50.0,
+    alpha_us=2.0,
+    ack_base_us=1.8,
+    ack_node_exp=0.6,
+    ack_bytes_frac0=1.45,
+    ack_bytes_frac_node=0.012,
+    drain_poll_us=0.6,
+    nic_fence_us=0.3,
+    signal_wire_us=0.03,
+    num_qp=4,
+)
+
+# IBGDA GPU-direct: no proxy; WQE submission burns SM cycles (§6.2), and
+# in-QP ordering makes put-with-signal free of software fences.
+IBGDA = TransportParams(
+    name="ibgda",
+    proxy_submit_us=0.0,
+    wire_GBps=50.0,
+    alpha_us=2.0,
+    ack_base_us=1.8,
+    ack_node_exp=0.6,
+    ack_bytes_frac0=0.25,
+    ack_bytes_frac_node=0.0,
+    drain_poll_us=0.0,
+    nic_fence_us=0.3,
+    signal_wire_us=0.03,
+    num_qp=1,
+    gpu_submit_us=0.35,
+    proxy=False,
+    sm_interference=0.04,
+    inqp_ordering_free=True,
+)
+
+# Intra-node NVLink: signals are hardware-coupled to the store, no proxy,
+# near-linear scaling with concurrency (§3.1).
+NVLINK = TransportParams(
+    name="nvlink",
+    proxy_submit_us=0.0,
+    wire_GBps=300.0,
+    alpha_us=1.5,
+    ack_base_us=0.3,
+    ack_node_exp=0.0,
+    ack_bytes_frac0=0.05,
+    ack_bytes_frac_node=0.0,
+    drain_poll_us=0.0,
+    nic_fence_us=0.0,
+    signal_wire_us=0.01,
+    num_qp=1,
+    gpu_submit_us=0.1,
+    proxy=False,
+    inqp_ordering_free=True,
+)
+
+TRANSPORTS = {t.name: t for t in (LIBFABRIC, IBRC, IBGDA, NVLINK)}
+
+
+# --------------------------------------------------------------------------
+# Proxy / NIC event simulation
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class OpEvent:
+    op: Op
+    submit_t: float       # when the proxy (or GPU) forwarded the WR
+    wire_start: float
+    wire_end: float
+    data_arrival: float   # payload visible at receiver
+    completion: float     # completion observed back at the sender NIC/proxy
+    proxy_stall: float    # proxy blocked time attributable to this op
+    nic_stall: float      # NIC pipeline defer time attributable to this op
+
+
+@dataclasses.dataclass
+class SimResult:
+    events: list[OpEvent]
+    total_time: float              # all WRs complete + signals visible
+    proxy_stall: float             # total proxy blocked time (fence drains)
+    nic_stall: float               # total NIC defer time (fence flags)
+    signal_visible: dict[int, float]   # tag -> receiver may consume tile
+    data_arrival: dict[int, float]     # tag -> payload landed
+    wire_busy: float               # total egress wire occupancy
+    n_fences: int
+
+    @property
+    def overhead_fraction(self) -> float:
+        """Fraction of total time not explained by wire occupancy (alpha/T)."""
+        if self.total_time <= 0:
+            return 0.0
+        return max(0.0, 1.0 - self.wire_busy / self.total_time)
+
+
+def simulate_proxy(
+    schedule: Schedule | Sequence[Op],
+    params: TransportParams,
+    *,
+    n_nodes: int,
+    start_time: float = 0.0,
+    ready_times: dict[int, float] | None = None,
+) -> SimResult:
+    """Run one PE's WR stream through the proxy+NIC pipeline.
+
+    ``ready_times`` optionally delays the submission of a PUT (by tag) until
+    e.g. the expert compute that produces it has finished — used for the
+    combine phase of the end-to-end model.
+    """
+    ops = schedule.ops if isinstance(schedule, Schedule) else tuple(schedule)
+    ready_times = ready_times or {}
+
+    submit_cost = params.proxy_submit_us if params.proxy else params.gpu_submit_us
+    now = start_time                      # proxy (or GPU submitter) clock
+    wire_free = start_time                # shared egress port
+    # NIC fence flags consult hardware completion registers scoped to
+    # the *connection* ("all prior requests on the same connection", §4.2):
+    # per-peer on Libfabric, per-QP on multi-QP IBRC where Perseus pins a
+    # peer's WRs to qp = pe % num_qp (§5).  Proxy fences consult the
+    # software completion counter (channel-wide).
+    conn_last_hw_completion: dict[int, float] = {}
+    inflight: list[tuple[float, int]] = []  # (sw_completion_time, conn)
+
+    events: list[OpEvent] = []
+    signal_visible: dict[int, float] = {}
+    data_arrival: dict[int, float] = {}
+    proxy_stall_total = 0.0
+    nic_stall_total = 0.0
+    wire_busy = 0.0
+    n_fences = 0
+    end_time = start_time
+
+    def conn_of(dest_pe: int) -> int:
+        # Ordering domain: the connection.  Multi-QP transports hash peers
+        # onto QPs (Perseus peer-pinning, §5); single-channel transports
+        # still keep one connection per remote peer.
+        if params.num_qp > 1:
+            return dest_pe % params.num_qp
+        return dest_pe
+
+    for op in ops:
+        if op.kind is OpKind.PUT:
+            ready = ready_times.get(op.tag, start_time)
+            now = max(now, ready) + submit_cost
+            conn = conn_of(op.dest_pe)
+            wire_start = max(now, wire_free)
+            w = params.wire_us(op.nbytes)
+            wire_end = wire_start + w
+            wire_free = wire_end
+            wire_busy += w
+            arrival = wire_end + params.alpha_us
+            completion = wire_end + params.ack_us(n_nodes, op.nbytes)
+            hw_completion = wire_end + params.hw_completion_us(op.nbytes)
+            heapq.heappush(inflight, (completion, conn))
+            conn_last_hw_completion[conn] = max(
+                conn_last_hw_completion.get(conn, start_time), hw_completion
+            )
+            data_arrival[op.tag] = arrival
+            end_time = max(end_time, arrival)
+            events.append(OpEvent(op, now, wire_start, wire_end, arrival,
+                                  completion, 0.0, 0.0))
+
+        elif op.kind is OpKind.FENCE:
+            # Proxy-side drain: block until every in-flight WR completed.
+            n_fences += 1
+            if params.inqp_ordering_free:
+                # GPU-direct transports (IBGDA) order put->signal inside the
+                # QP in hardware; the software fence is a no-op (§6.2).
+                events.append(OpEvent(op, now, now, now, now, now, 0.0, 0.0))
+                continue
+            target = now
+            while inflight:
+                c, _ = heapq.heappop(inflight)
+                target = max(target, c)
+            stall = max(0.0, target - now) + params.drain_poll_us
+            proxy_stall_total += stall
+            now += stall
+            events.append(OpEvent(op, now, now, now, now, now, stall, 0.0))
+
+        elif op.kind in (OpKind.SIGNAL, OpKind.SIGNAL_FENCED):
+            fenced = op.kind is OpKind.SIGNAL_FENCED
+            now += params.signal_submit_us if params.proxy else submit_cost
+            conn = conn_of(op.dest_pe)
+            wire_start = max(now, wire_free)
+            nic_stall = 0.0
+            if fenced and not params.inqp_ordering_free:
+                n_fences += 1
+                # NIC defers the flagged WR until prior WRs on this
+                # *connection* complete (hardware registers); the proxy does
+                # NOT block (Fig. 2c).
+                barrier = conn_last_hw_completion.get(
+                    conn, start_time
+                ) + params.nic_fence_us
+                nic_stall = max(0.0, barrier - wire_start)
+                wire_start = max(wire_start, barrier)
+            elif fenced:
+                n_fences += 1  # flag present but free (in-QP ordering)
+            wire_end = wire_start + params.signal_wire_us
+            wire_free = max(wire_free, wire_end)
+            wire_busy += params.signal_wire_us
+            visible = wire_end + params.alpha_us
+            completion = wire_end + params.ack_us(n_nodes, 8)
+            hw_completion = wire_end + params.hw_completion_us(8)
+            heapq.heappush(inflight, (completion, conn))
+            conn_last_hw_completion[conn] = max(
+                conn_last_hw_completion.get(conn, start_time), hw_completion
+            )
+            signal_visible[op.tag] = visible
+            nic_stall_total += nic_stall
+            end_time = max(end_time, visible)
+            events.append(OpEvent(op, now, wire_start, wire_end, visible,
+                                  completion, 0.0, nic_stall))
+        else:  # pragma: no cover
+            raise ValueError(op.kind)
+
+    # PUT-only schedules: consumers still need the data itself.
+    for tag, arr in data_arrival.items():
+        signal_visible.setdefault(tag, arr if not _has_signals(ops) else arr)
+    total = max(end_time, now) - start_time
+    return SimResult(
+        events=events,
+        total_time=total,
+        proxy_stall=proxy_stall_total,
+        nic_stall=nic_stall_total,
+        signal_visible=signal_visible,
+        data_arrival=data_arrival,
+        wire_busy=wire_busy,
+        n_fences=n_fences,
+    )
+
+
+def _has_signals(ops: Iterable[Op]) -> bool:
+    return any(
+        o.kind in (OpKind.SIGNAL, OpKind.SIGNAL_FENCED) for o in ops
+    )
+
+
+def signaling_efficiency(
+    *,
+    n_transfers: int,
+    nbytes: int,
+    n_nodes: int,
+    params: TransportParams,
+    kind: ScheduleKind | str = ScheduleKind.COUPLED,
+    group_size: int | None = None,
+    pe_per_node: int = 4,
+) -> float:
+    """Fig. 5a metric: signaled throughput normalized to pipelined put-only."""
+    n_dest = max(1, (n_nodes - 1) * pe_per_node)
+    transfers = [
+        Transfer(tag=i, dest_pe=1 + (i % n_dest), nbytes=nbytes,
+                 dest_node=1 + (i % max(1, n_nodes - 1)))
+        for i in range(n_transfers)
+    ]
+    base = simulate_proxy(
+        build_schedule(transfers, ScheduleKind.PUT_ONLY),
+        params, n_nodes=n_nodes,
+    )
+    test = simulate_proxy(
+        build_schedule(transfers, kind, group_size=group_size),
+        params, n_nodes=n_nodes,
+    )
+    return base.total_time / test.total_time
+
+
+# --------------------------------------------------------------------------
+# GPU compute model + end-to-end MoE layer
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GpuParams:
+    name: str
+    peak_tflops_bf16: float
+    mfu: float                  # achievable fraction inside the megakernel
+
+    def us_for_flops(self, flops: float, interference: float = 0.0) -> float:
+        eff = self.peak_tflops_bf16 * 1e12 * self.mfu * (1.0 - interference)
+        return flops / eff * 1e6
+
+
+A100 = GpuParams("a100", 312.0, 0.55)
+H100 = GpuParams("h100", 990.0, 0.50)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEModelSpec:
+    """Paper Table 1 (+ Llama4-Scout used in Fig. 1)."""
+
+    name: str
+    hidden: int       # H
+    intermediate: int  # I
+    n_experts: int    # E
+    top_k: int        # k
+    n_moe_layers: int
+    dtype_bytes: int = 2
+
+    def expert_capacity(self, tokens: int) -> int:
+        # EC = S * k / E (§6.1), per sending PE under balanced routing.
+        return max(1, tokens * self.top_k // self.n_experts)
+
+    def bytes_per_expert(self, tokens: int) -> int:
+        return self.expert_capacity(tokens) * self.hidden * self.dtype_bytes
+
+    def flops_per_token_expert(self) -> float:
+        # Gated MLP: 3 GEMMs (gate/up/down) = 6 * H * I MAC-FLOPs per token
+        # (the paper's "gated MLP factor x6" footnote).
+        return 6.0 * self.hidden * self.intermediate
+
+    def attn_flops_per_token(self) -> float:
+        # Non-MoE per-layer work (QKV/O projections + gate): fixed per-layer
+        # floor that bounds small-S speedups in the e2e model.
+        return 8.0 * self.hidden * self.hidden + 2.0 * self.hidden * self.n_experts
+
+    def compute_comm_ratio(self) -> float:
+        """TFLOPs per GB moved (dispatch+combine), cf. paper footnote 2."""
+        fl = self.top_k * self.flops_per_token_expert()
+        vol = 2 * self.top_k * self.hidden * self.dtype_bytes
+        return fl / vol / 1e3
+
+
+QWEN3_30B = MoEModelSpec("qwen3-30b-a3b", 2048, 768, 128, 8, 48)
+GPT_OSS_120B = MoEModelSpec("gpt-oss-120b", 2880, 2880, 128, 4, 36)
+DEEPSEEK_V3 = MoEModelSpec("deepseek-v3", 7168, 2048, 256, 8, 58)
+LLAMA4_SCOUT = MoEModelSpec("llama4-scout-17b", 5120, 8192, 16, 1, 24)
+
+PAPER_MODELS = {
+    m.name: m for m in (QWEN3_30B, GPT_OSS_120B, DEEPSEEK_V3, LLAMA4_SCOUT)
+}
+
+
+@dataclasses.dataclass
+class LayerResult:
+    latency_us: float
+    dispatch: SimResult
+    combine: SimResult
+    compute_busy_us: float
+    compute_span_us: float
+    first_compute_us: float
+    n_remote_transfers: int
+
+    @property
+    def utilization(self) -> float:
+        return min(1.0, self.compute_busy_us / max(self.latency_us, 1e-9))
+
+
+def _expert_token_counts(
+    spec: MoEModelSpec, tokens: int, skew_zipf: float, n_pe: int
+) -> list[int]:
+    """Tokens routed to each expert by one sender (balanced or Zipf §6.4)."""
+    E = spec.n_experts
+    total = tokens * spec.top_k
+    if skew_zipf <= 0:
+        return [total // E] * E
+    w = [1.0 / (r ** skew_zipf) for r in range(1, E + 1)]
+    s = sum(w)
+    counts = [max(0, int(round(total * x / s))) for x in w]
+    return counts
+
+
+def simulate_moe_layer(
+    spec: MoEModelSpec,
+    *,
+    tokens_per_pe: int,
+    n_nodes: int,
+    pe_per_node: int,
+    transport: TransportParams,
+    gpu: GpuParams = A100,
+    schedule: ScheduleKind | str = ScheduleKind.COUPLED,
+    group_size: int | None = None,
+    skew_zipf: float = 0.0,
+) -> LayerResult:
+    """One MoE layer (dispatch -> expert GEMMs -> combine) on one PE.
+
+    Symmetric-traffic assumption: the tiles this PE *receives* have the same
+    arrival-time distribution as the signal-visibility times of the tiles it
+    *sends* (all PEs run the identical program on identically-sized shards).
+    Expert compute is a single aggregate-GPU work queue: a tile's GEMMs may
+    start once its signal is visible; combine PUTs are released as their
+    tile's compute retires (tile-granular overlap, §2.3).
+    """
+    kind = ScheduleKind(schedule)
+    P = n_nodes * pe_per_node
+    e_per_pe = spec.n_experts // max(1, P)
+    if e_per_pe == 0:
+        raise ValueError(
+            f"{spec.name}: E={spec.n_experts} < P={P}; EP degree too large"
+        )
+    counts = _expert_token_counts(spec, tokens_per_pe, skew_zipf, P)
+
+    # ---- dispatch: one tile per remote expert --------------------------
+    my_pe, my_node = 0, 0
+    transfers: list[Transfer] = []
+    tag = 0
+    local_tags: list[tuple[int, int]] = []  # (tag, tokens) staying on-node
+    for pe in range(P):
+        node = pe // pe_per_node
+        for j in range(e_per_pe):
+            e_idx = pe * e_per_pe + j
+            tok = counts[e_idx]
+            if tok == 0:
+                continue
+            nb = tok * spec.hidden * spec.dtype_bytes
+            if node == my_node:
+                local_tags.append((tag, tok))
+            else:
+                transfers.append(
+                    Transfer(tag=tag, dest_pe=pe, nbytes=nb, dest_node=node)
+                )
+            tag += 1
+    tok_of_tag = {}
+    for t in transfers:
+        tok_of_tag[t.tag] = t.nbytes // (spec.hidden * spec.dtype_bytes)
+    for lt, tok in local_tags:
+        tok_of_tag[lt] = tok
+
+    dispatch = simulate_proxy(
+        build_schedule(transfers, kind if kind is not ScheduleKind.PUT_ONLY
+                       else ScheduleKind.PUT_ONLY, group_size=group_size),
+        transport,
+        n_nodes=n_nodes,
+    )
+
+    # ---- receive-side compute queue ------------------------------------
+    # Mirrored arrivals: remote tiles become ready at the sender-side
+    # signal-visible times; intra-node tiles ride NVLink.
+    interference = transport.sm_interference
+    # Subscriber decode + scheduler enqueue per arriving tile (§2.3's
+    # megakernel "OS"): small but bounds the speedup floor at tiny S.
+    recv_tile_us = 1.0
+    jobs: list[tuple[float, float]] = []  # (ready_us, duration_us)
+    for t in transfers:
+        ready = dispatch.signal_visible.get(t.tag, dispatch.total_time)
+        d = recv_tile_us + gpu.us_for_flops(
+            tok_of_tag[t.tag] * spec.flops_per_token_expert(), interference
+        )
+        jobs.append((ready, d))
+    nv_per_tile = NVLINK.alpha_us + 2.0  # staging + NVLink store
+    for lt, tok in local_tags:
+        d = recv_tile_us + gpu.us_for_flops(
+            tok * spec.flops_per_token_expert(), interference
+        )
+        jobs.append((nv_per_tile, d))
+
+    jobs.sort()
+    clock = 0.0
+    busy = 0.0
+    finish_times: dict[int, float] = {}
+    order: list[tuple[float, float, int]] = [
+        (r, d, i) for i, (r, d) in enumerate(jobs)
+    ]
+    first_start = math.inf
+    for r, d, i in order:
+        start = max(clock, r)
+        first_start = min(first_start, start)
+        clock = start + d
+        busy += d
+        finish_times[i] = clock
+    compute_span = clock - (first_start if order else 0.0)
+
+    # ---- combine: return tiles as compute retires ----------------------
+    combine_transfers: list[Transfer] = []
+    ready_times: dict[int, float] = {}
+    for idx, t in enumerate(transfers):
+        ct = Transfer(tag=10_000 + t.tag, dest_pe=t.dest_pe,
+                      nbytes=t.nbytes, dest_node=t.dest_node)
+        combine_transfers.append(ct)
+        ready_times[ct.tag] = finish_times[idx]
+    combine = simulate_proxy(
+        build_schedule(combine_transfers, kind if kind is not
+                       ScheduleKind.PUT_ONLY else ScheduleKind.PUT_ONLY,
+                       group_size=group_size),
+        transport,
+        n_nodes=n_nodes,
+        start_time=max(dispatch.total_time, 0.0),
+        ready_times=ready_times,
+    )
+    combine_done = (
+        max(combine.signal_visible.values()) if combine.signal_visible
+        else clock
+    )
+    # Final weighted accumulation of returned tiles (cheap, bandwidth-bound).
+    local_done = clock
+    # Per-layer non-MoE floor: attention projections, gate, norms, staging
+    # and megakernel scheduling — serial with the dispatch of this layer.
+    overhead = gpu.us_for_flops(
+        tokens_per_pe * spec.attn_flops_per_token(), interference
+    ) + 25.0
+    latency = max(combine_done, local_done) + overhead
+    return LayerResult(
+        latency_us=latency,
+        dispatch=dispatch,
+        combine=combine,
+        compute_busy_us=busy,
+        compute_span_us=compute_span,
+        first_compute_us=first_start if order else 0.0,
+        n_remote_transfers=len(transfers),
+    )
+
+
+CROSS_LAYER_OVERLAP = 0.45
+"""Fraction of per-layer communication overhead hidden by cross-layer
+pipelining in a full forward pass.
+
+A megakernel has no layer barriers: while the proxy drains layer L's fences,
+processor CTAs run layer L/L+1 attention, norms and local-expert tiles, so
+only part of the single-layer serialization (which Fig. 7/8 measure in
+isolation and our `simulate_moe_layer` reproduces additively) lands on the
+end-to-end critical path.  0.45 is calibrated jointly to Fig. 14 (19x
+vanilla / 3.5x Perseus weak-scaling degradation at 16 nodes, S=1K) and
+Fig. 1 (~10x at 8 nodes); see EXPERIMENTS.md for the validation deltas.
+"""
+
+
+def simulate_forward(
+    spec: MoEModelSpec,
+    *,
+    tokens_per_pe: int,
+    n_nodes: int,
+    pe_per_node: int,
+    transport: TransportParams,
+    gpu: GpuParams = A100,
+    schedule: ScheduleKind | str = ScheduleKind.COUPLED,
+    group_size: int | None = None,
+    skew_zipf: float = 0.0,
+    cross_layer_overlap: float = CROSS_LAYER_OVERLAP,
+) -> float:
+    """Forward-pass latency (us) over all MoE layers.
+
+    Per-layer latency = compute floor + the communication overhead that
+    survives cross-layer overlap (see ``CROSS_LAYER_OVERLAP``).
+    """
+    layer = simulate_moe_layer(
+        spec,
+        tokens_per_pe=tokens_per_pe,
+        n_nodes=n_nodes,
+        pe_per_node=pe_per_node,
+        transport=transport,
+        gpu=gpu,
+        schedule=schedule,
+        group_size=group_size,
+        skew_zipf=skew_zipf,
+    )
+    overhead = gpu.us_for_flops(
+        tokens_per_pe * spec.attn_flops_per_token(),
+        transport.sm_interference,
+    ) + 25.0
+    compute_floor = layer.compute_busy_us + overhead
+    comm_overhead = max(0.0, layer.latency_us - compute_floor)
+    exposed = comm_overhead * (1.0 - cross_layer_overlap)
+    return (compute_floor + exposed) * spec.n_moe_layers
+
+
+# --------------------------------------------------------------------------
+# ALLTOALL microbenchmark (Triton-distributed case study, Fig. 11/13)
+# --------------------------------------------------------------------------
+
+
+def alltoall_transfers(
+    *, n_pe: int, pe_per_node: int, nbytes_per_peer: int
+) -> list[Transfer]:
+    out = []
+    tag = 0
+    for pe in range(1, n_pe):
+        node = pe // pe_per_node
+        if node == 0:
+            continue  # NVLink
+        out.append(Transfer(tag=tag, dest_pe=pe, nbytes=nbytes_per_peer,
+                            dest_node=node))
+        tag += 1
+    return out
+
+
+def simulate_alltoall(
+    *,
+    n_nodes: int,
+    pe_per_node: int,
+    nbytes_per_peer: int,
+    transport: TransportParams,
+    schedule: ScheduleKind | str,
+    group_size: int | None = None,
+) -> SimResult:
+    transfers = alltoall_transfers(
+        n_pe=n_nodes * pe_per_node,
+        pe_per_node=pe_per_node,
+        nbytes_per_peer=nbytes_per_peer,
+    )
+    return simulate_proxy(
+        build_schedule(transfers, schedule, group_size=group_size),
+        transport,
+        n_nodes=n_nodes,
+    )
+
+
+def nccl_alltoall_latency(
+    *,
+    n_nodes: int,
+    pe_per_node: int,
+    nbytes_per_peer: int,
+    transport: TransportParams,
+    launch_overhead_us: float = 65.0,
+    bw_efficiency: float = 0.85,
+) -> float:
+    """Host-initiated bulk collective model (Fig. 13 baseline).
+
+    NCCL pays fixed kernel-launch + rendezvous overhead, then moves the
+    inter-node volume at near-line-rate; completion is a global barrier.
+    """
+    remote_peers = (n_nodes - 1) * pe_per_node
+    vol = remote_peers * nbytes_per_peer
+    return (
+        launch_overhead_us
+        + vol / (transport.wire_GBps * bw_efficiency * 1e3)
+        + transport.alpha_us * math.log2(max(2, n_nodes * pe_per_node))
+    )
+
+
+# --------------------------------------------------------------------------
+# alpha-beta decomposition (Appendix A)
+# --------------------------------------------------------------------------
+
+
+def fit_alpha_beta(
+    sizes_bytes: Sequence[float], latencies_us: Sequence[float]
+) -> tuple[float, float, float]:
+    """Least-squares fit T = alpha + beta*M. Returns (alpha_us, beta_us_per_B, R^2)."""
+    n = len(sizes_bytes)
+    if n < 2:
+        raise ValueError("need >= 2 points")
+    mx = sum(sizes_bytes) / n
+    my = sum(latencies_us) / n
+    sxx = sum((x - mx) ** 2 for x in sizes_bytes)
+    sxy = sum((x - mx) * (y - my) for x, y in zip(sizes_bytes, latencies_us))
+    beta = sxy / sxx if sxx else 0.0
+    alpha = my - beta * mx
+    ss_res = sum(
+        (y - (alpha + beta * x)) ** 2
+        for x, y in zip(sizes_bytes, latencies_us)
+    )
+    ss_tot = sum((y - my) ** 2 for y in latencies_us)
+    r2 = 1.0 - ss_res / ss_tot if ss_tot else 1.0
+    return alpha, beta, r2

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels (interpret-mode validated on CPU, Mosaic on TPU).
+
+Each kernel module pairs with a pure-jnp oracle in ``ref.py``; ``ops.py``
+holds the jit'd public wrappers."""

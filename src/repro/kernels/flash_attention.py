@@ -1,0 +1,135 @@
+"""Blockwise (flash) attention as a Pallas TPU kernel.
+
+Online-softmax attention over KV blocks with GQA support: the kv-head block
+index maps each query head to its shared KV head, so grouped KV is never
+materialized per query head.
+
+Tiling: grid ``(B, Hq, Tq/bq, Tk/bk)``, KV innermost.  VMEM per step::
+
+    q   (bq, D)      k (bk, D)      v (bk, D)
+    m, l (bq, 1) f32 running max / normalizer (scratch)
+    acc (bq, D) f32  output accumulator (scratch)
+
+Causal masking prunes fully-masked KV blocks via ``pl.when`` on the block
+indices, giving the standard ~2x saving for long prefill.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, bq: int, bk: int, n_k: int):
+    tq = pl.program_id(2)
+    tk = pl.program_id(3)
+
+    @pl.when(tk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body():
+        q = q_ref[0, 0]                              # (bq, D)
+        k = k_ref[0, 0]                              # (bk, D)
+        v = v_ref[0, 0]                              # (bk, D)
+        s = jnp.dot(
+            q, k.T, preferred_element_type=jnp.float32
+        ) * scale                                    # (bq, bk)
+        if causal:
+            iq = tq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            ik = tk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(iq >= ik, s, _NEG_INF)
+        m_prev = m_ref[...]                          # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                       # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)               # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    if causal:
+        # Skip KV blocks entirely above the diagonal.
+        @pl.when(tk * bk <= tq * bq + (bq - 1))
+        def _():
+            body()
+    else:
+        body()
+
+    @pl.when(tk == n_k - 1)
+    def _flush():
+        l = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,      # (B, Hq, Tq, D)
+    k: jax.Array,      # (B, Hkv, Tk, D)
+    v: jax.Array,      # (B, Hkv, Tk, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash attention with GQA. Returns (B, Hq, Tq, D)."""
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q, Tq)
+    bk = min(block_k, Tk)
+    n_q = pl.cdiv(Tq, bq)
+    n_k = pl.cdiv(Tk, bk)
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+
+    grid = (B, Hq, n_q, n_k)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, bq=bq, bk=bk, n_k=n_k
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, tq, tk: (b, h, tq, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, D),
+                lambda b, h, tq, tk: (b, h // group, tk, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, D),
+                lambda b, h, tq, tk: (b, h // group, tk, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, D), lambda b, h, tq, tk: (b, h, tq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(
+                "parallel", "parallel", "parallel", "arbitrary"
+            ),
+        ),
+    )(q, k, v)

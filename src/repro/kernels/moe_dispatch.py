@@ -1,0 +1,183 @@
+"""Megakernel-style MoE dispatch as a Pallas TPU remote-DMA kernel.
+
+This is the paper's mechanism adapted to TPU (DESIGN.md §2).  Each EP rank
+holds a send buffer ``buf[(P, e_local, C, H)]`` — one tile per (destination
+rank, local-expert slot) — and the kernel delivers tile ``buf[dst, j]`` into
+``out[src, j]`` on rank ``dst`` with one *async remote copy per expert tile*
+(the paper's per-expert PUT granularity, §3.2).
+
+Put-with-signal on TPU: ``pltpu.make_async_remote_copy`` increments the
+*receiver's* DMA semaphore when the payload has landed — i.e. the signal is
+hardware-coupled to the data, which is exactly the NIC-side ordering Perseus
+argues for.  What the signaling schedule still controls on TPU is the
+*sender-side issue discipline*:
+
+  ``coupled``    — vanilla proxy semantics: the sender fully drains each
+                   transfer (``wait_send``) before issuing the next one.
+                   One serialized drain per expert tile — the analogue of
+                   one proxy FENCE per PUT (Fig. 2a / Fig. 6a).
+  ``decoupled``  — Perseus Algorithm 1: all tiles for one destination are
+                   issued back-to-back, then one drain per destination
+                   group before moving on (per-PE grouping, §4.1).
+  ``perseus``    — all (P-1)*e_local tiles issued back-to-back with zero
+                   intervening drains; a single terminal drain covers the
+                   whole dispatch (decoupling + NIC-side ordering,
+                   Fig. 2d).  ``nic_ordered`` is accepted as an alias: on
+                   TPU the hardware recv semaphore *is* the NIC fence flag.
+
+Receive side is schedule-independent: the rank waits on the per-source
+recv semaphores (the "subscriber" of §2.3) and the tile is then ready for
+expert compute.
+
+Communication kernels move HBM->HBM via the DMA engines, so refs live in
+``pl.ANY`` memory space (no VMEM tiling — the compute kernels in
+``expert_gemm.py``/``flash_attention.py`` own the VMEM BlockSpec story).
+Correctness is validated in interpret mode (``pltpu.InterpretParams``),
+which fully interprets cross-device DMAs on CPU; on real TPU the same code
+lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["remote_dispatch", "SCHEDULES"]
+
+SCHEDULES = ("coupled", "decoupled", "nic_ordered", "perseus")
+
+
+def _dispatch_kernel(
+    buf_ref,          # (P, e_local, C, H) send tiles, ANY/HBM
+    out_ref,          # (P, e_local, C, H) recv tiles, ANY/HBM
+    local_sem,        # DMA sem for the self-block copy
+    send_sems,        # (P, e_local) DMA sems, indexed [offset, expert]
+    recv_sems,        # (P, e_local) DMA sems, indexed [offset, expert]
+    *,
+    num_ranks: int,
+    e_local: int,
+    axis_name: str,
+    schedule: str,
+):
+    my_id = lax.axis_index(axis_name)
+
+    # ---- self block: plain local DMA (NVLink/on-chip path, no proxy) ----
+    local = pltpu.make_async_copy(
+        buf_ref.at[my_id], out_ref.at[my_id], local_sem
+    )
+    local.start()
+
+    def tile_copy(offset, j):
+        """Remote copy of expert tile j to rank (me+offset); by symmetry the
+        matching incoming tile arrives from rank (me-offset) on sem slot
+        [offset, j]."""
+        dst = lax.rem(my_id + offset, num_ranks)
+        return pltpu.make_async_remote_copy(
+            src_ref=buf_ref.at[dst, j],
+            dst_ref=out_ref.at[my_id, j],
+            send_sem=send_sems.at[offset, j],
+            recv_sem=recv_sems.at[offset, j],
+            device_id=(dst,),
+            device_id_type=pltpu.DeviceIdType.MESH,
+        )
+
+    # ---- sender-side issue discipline (the paper's schedules) -----------
+    if schedule == "coupled":
+        # PUT -> full drain -> (signal rides the drained DMA): serial issue.
+        for offset in range(1, num_ranks):
+            for j in range(e_local):
+                c = tile_copy(offset, j)
+                c.start()
+                c.wait_send()          # proxy-FENCE analogue: drain per tile
+    elif schedule == "decoupled":
+        # Per-destination groups: burst the group's PUTs, one drain/group.
+        for offset in range(1, num_ranks):
+            group = [tile_copy(offset, j) for j in range(e_local)]
+            for c in group:
+                c.start()
+            for c in group:
+                c.wait_send()          # one batched drain per destination
+    elif schedule in ("perseus", "nic_ordered"):
+        # Everything in flight at once; ordering enforced by the hardware
+        # recv semaphore (the "NIC fence flag" the TPU gives us for free).
+        copies = [
+            tile_copy(offset, j)
+            for offset in range(1, num_ranks)
+            for j in range(e_local)
+        ]
+        for c in copies:
+            c.start()
+        for c in copies:
+            c.wait_send()              # terminal drain only
+    else:  # pragma: no cover
+        raise ValueError(f"unknown schedule {schedule!r}")
+
+    # ---- receive side: subscriber waits per-source signals --------------
+    for offset in range(1, num_ranks):
+        for j in range(e_local):
+            tile_copy(offset, j).wait_recv()
+    local.wait()
+
+
+@functools.partial(
+    jax.named_call, name="moe_remote_dispatch"
+)
+def remote_dispatch(
+    buf: jax.Array,
+    *,
+    axis_name: str,
+    schedule: str = "perseus",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """ALLTOALL-equivalent remote dispatch with a Perseus signaling schedule.
+
+    Args:
+      buf: (P, e_local, C, H) per-rank send buffer; ``buf[dst]`` is the set
+        of expert tiles destined for rank ``dst``.  Must be called inside
+        ``shard_map`` over ``axis_name``.
+      schedule: one of ``SCHEDULES``.
+      interpret: force/disable interpret mode; default = interpret on CPU,
+        compiled on TPU.
+
+    Returns:
+      (P, e_local, C, H): ``out[src]`` holds the tiles rank ``src`` sent us.
+    """
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule must be one of {SCHEDULES}, got {schedule}")
+    num_ranks = lax.axis_size(axis_name)
+    if buf.shape[0] != num_ranks:
+        raise ValueError(
+            f"buf leading dim {buf.shape[0]} != axis size {num_ranks}"
+        )
+    e_local = buf.shape[1]
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+
+    kernel = functools.partial(
+        _dispatch_kernel,
+        num_ranks=num_ranks,
+        e_local=e_local,
+        axis_name=axis_name,
+        schedule=schedule,
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(buf.shape, buf.dtype),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((num_ranks, e_local)),
+            pltpu.SemaphoreType.DMA((num_ranks, e_local)),
+        ],
+        interpret=pltpu.InterpretParams() if interpret else False,
+        compiler_params=pltpu.CompilerParams(
+            has_side_effects=True,
+            collective_id=7,
+        ),
+    )(buf)

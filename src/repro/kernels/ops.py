@@ -1,0 +1,61 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are what the model zoo and the MoE block call; each wrapper owns the
+jit boundary, default block sizes, and the CPU-interpret/TPU-compiled
+switch, so call sites never touch pallas_call directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import expert_gemm as _expert_gemm
+from repro.kernels import flash_attention as _flash
+from repro.kernels import moe_dispatch as _dispatch
+from repro.kernels import ssd_scan as _ssd
+
+__all__ = [
+    "remote_dispatch",
+    "expert_ffn",
+    "flash_attention",
+    "ssd_scan",
+]
+
+# Re-export: remote_dispatch must run *inside* shard_map, so it cannot be
+# independently jit'd here; the MoE block owns its jit boundary.
+remote_dispatch = _dispatch.remote_dispatch
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_t", "block_f")
+)
+def expert_ffn(
+    x, w1, w3, w2, *, activation: str = "silu",
+    block_t: int = 128, block_f: int = 128,
+):
+    """(E,T,H),(E,H,F),(E,H,F),(E,F,H) -> (E,T,H) fused gated MLP."""
+    return _expert_gemm.expert_ffn(
+        x, w1, w3, w2, activation=activation,
+        block_t=block_t, block_f=block_f,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k")
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, block_q: int = 128, block_k: int = 128,
+):
+    """(B,Hq,T,D) x (B,Hkv,T,D)^2 -> (B,Hq,T,D) blockwise attention."""
+    return _flash.flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, a, bmat, cmat, *, chunk: int = 128):
+    """Mamba-2 SSD chunked scan; see ssd_scan.py for shapes."""
+    return _ssd.ssd_scan(x, dt, a, bmat, cmat, chunk=chunk)

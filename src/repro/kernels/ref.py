@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function computes the same math as its kernel with straightforward
+jax.numpy — no tiling, no DMA, no online softmax — and is the ground truth
+for the per-kernel ``assert_allclose`` sweeps in ``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dispatch_ref",
+    "expert_ffn_ref",
+    "attention_ref",
+    "ssd_scan_ref",
+]
+
+
+def dispatch_ref(global_buf: jax.Array, n_ranks: int) -> jax.Array:
+    """Oracle for ``moe_dispatch.remote_dispatch`` at the *global* view.
+
+    ``global_buf``: (P*P, e, C, H) — rank r's send buffer occupies rows
+    [r*P, (r+1)*P) with row (r*P + d) destined for rank d.  The output in
+    rank d's shard row s must be what rank s sent to d (ALLTOALL semantics,
+    i.e. a transpose of the (src, dst) block matrix).
+    """
+    P = n_ranks
+    rest = global_buf.shape[1:]
+    g = global_buf.reshape((P, P) + rest)      # [src, dst, ...]
+    return jnp.swapaxes(g, 0, 1).reshape((P * P,) + rest)
+
+
+def expert_ffn_ref(
+    x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array,
+    *, activation: str = "silu",
+) -> jax.Array:
+    """Oracle for ``expert_gemm.expert_ffn``: per-expert gated MLP in f32."""
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+
+    def one(xe, w1e, w3e, w2e):
+        xf = xe.astype(jnp.float32)
+        h = act(xf @ w1e.astype(jnp.float32)) * (xf @ w3e.astype(jnp.float32))
+        return h @ w2e.astype(jnp.float32)
+
+    return jax.vmap(one)(x, w1, w3, w2).astype(x.dtype)
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, scale: float | None = None,
+) -> jax.Array:
+    """Oracle for ``flash_attention``: materialized-softmax GQA attention."""
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Tq, Tk), dtype=bool), k=Tk - Tq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,     # (B, L, H, Dh)
+    dt: jax.Array,    # (B, L, H)
+    a: jax.Array,     # (H,)
+    bmat: jax.Array,  # (B, L, H, N)
+    cmat: jax.Array,  # (B, L, H, N)
+) -> jax.Array:
+    """Oracle for ``ssd_scan``: step-by-step recurrence via lax.scan."""
+    B, L, H, Dh = x.shape
+    N = bmat.shape[-1]
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp           # (H,Dh),(H,),(H,N),(H,N)
+        decay = jnp.exp(dtt * a)        # (H,)
+        s = s * decay[:, None, None] + (
+            dtt[:, None, None] * bt[:, :, None] * xt[:, None, :]
+        )                               # (H, N, Dh)
+        y = jnp.einsum("hn,hnd->hd", ct, s)
+        return s, y
+
+    def one_batch(xb, dtb, bb, cb):
+        s0 = jnp.zeros((H, N, Dh), dtype=jnp.float32)
+        _, ys = jax.lax.scan(
+            step, s0,
+            (xb.astype(jnp.float32), dtb.astype(jnp.float32),
+             bb.astype(jnp.float32), cb.astype(jnp.float32)),
+        )
+        return ys                        # (L, H, Dh)
+
+    return jax.vmap(one_batch)(x, dt, bmat, cmat).astype(x.dtype)

@@ -1,0 +1,123 @@
+"""Mamba-2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+Implements the selective-state recurrence used by the ``mamba2-780m`` arch::
+
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * (B_t (x) x_t)      # (N, Dh)
+    y_t = C_t @ S_t + D_h * x_t
+
+via the SSD chunk decomposition (arXiv:2405.21060): within a chunk of
+length ``Lc`` the contribution is a masked attention-like product
+(``(C B^T) * decay``), and chunks exchange a single (N, Dh) state carried
+through VMEM scratch across sequential grid steps.
+
+Tiling: grid ``(B, H, L/Lc)`` with the chunk axis innermost/sequential.
+VMEM per step: x (Lc, Dh), B/C (Lc, N), dt (Lc, 1), state (N, Dh) f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *,
+            n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Lc, Dh)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (Lc, 1)
+    a = a_ref[0, 0, 0]                           # scalar A_h (<0)
+    bmat = b_ref[0, 0].astype(jnp.float32)       # (Lc, N)
+    cmat = c_ref[0, 0].astype(jnp.float32)       # (Lc, N)
+
+    Lc = x.shape[0]
+    # log-decay per step and cumulative sums (inclusive).
+    la = dt * a                                  # (Lc, 1)
+    cum = jnp.cumsum(la, axis=0)                 # sum_{u<=t} la_u
+
+    # ---- inter-chunk: y_inter[t] = (C_t @ S_prev) * exp(cum_t)
+    s_prev = state_ref[...]                      # (N, Dh)
+    y_inter = jnp.dot(
+        cmat, s_prev, preferred_element_type=jnp.float32
+    ) * jnp.exp(cum)                             # (Lc, Dh)
+
+    # ---- intra-chunk: M[t,s] = (C_t . B_s) * exp(cum_t - cum_s) * dt_s,
+    #       s <= t  (decay over (s, t] == cum_t - cum_s).
+    scores = jnp.dot(cmat, bmat.T, preferred_element_type=jnp.float32)
+    it = jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 0)
+    is_ = jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 1)
+    mask = it >= is_
+    # Mask the log-decay before exp (upper triangle is large-positive and
+    # would overflow to inf, poisoning the masked product with NaN).
+    ldiff = jnp.where(mask, cum - cum.reshape(1, Lc), -jnp.inf)
+    m = scores * jnp.exp(ldiff) * dt.reshape(1, Lc)
+    y_intra = jnp.dot(m, x, preferred_element_type=jnp.float32)
+
+    o_ref[0, 0] = (y_inter + y_intra).astype(o_ref.dtype)
+
+    # ---- state update: S = S_prev * exp(cum_L) + sum_s exp(cum_L - cum_s)
+    #       * dt_s * B_s (x) x_s
+    total = cum[Lc - 1]                          # scalar (1,)
+    w = jnp.exp(total - cum) * dt                # (Lc, 1)
+    state_ref[...] = s_prev * jnp.exp(total) + jnp.dot(
+        (bmat * w).T, x, preferred_element_type=jnp.float32
+    )
+
+
+def ssd_scan(
+    x: jax.Array,     # (B, L, H, Dh)
+    dt: jax.Array,    # (B, L, H)   positive step sizes (post-softplus)
+    a: jax.Array,     # (H,)        negative decay rates
+    bmat: jax.Array,  # (B, L, H, N)
+    cmat: jax.Array,  # (B, L, H, N)
+    *,
+    chunk: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Chunked SSD scan. Returns y: (B, L, H, Dh) (without the D*x skip)."""
+    B, L, H, Dh = x.shape
+    N = bmat.shape[-1]
+    Lc = min(chunk, L)
+    if L % Lc:
+        raise ValueError(f"L={L} must be divisible by chunk={Lc}")
+    n_chunks = L // Lc
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+
+    # Layout: head-major so each (b, h) scans its own sequence.
+    xh = x.transpose(0, 2, 1, 3)        # (B, H, L, Dh)
+    dth = dt.transpose(0, 2, 1)[..., None]  # (B, H, L, 1)
+    bh = bmat.transpose(0, 2, 1, 3)     # (B, H, L, N)
+    ch = cmat.transpose(0, 2, 1, 3)
+    ah = a.reshape(H, 1, 1).astype(jnp.float32)  # (H, 1, 1)
+
+    grid = (B, H, n_chunks)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Lc, Dh), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Lc, 1), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, c: (h, 0, 0)),
+            pl.BlockSpec((1, 1, Lc, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Lc, N), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Lc, Dh), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, L, Dh), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, Dh), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(xh, dth, ah, bh, ch)
+    return out.transpose(0, 2, 1, 3)    # (B, L, H, Dh)

@@ -1,0 +1,505 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: parameters,
+optimizer state, batches and KV caches are ``ShapeDtypeStruct`` stand-ins
+(zero allocation), sharded over the production mesh; ``.lower().compile()``
+must succeed and yields
+
+  * ``memory_analysis``  — per-device bytes (fits / doesn't fit),
+  * ``cost_analysis``    — HLO FLOPs / bytes for the roofline (§Roofline),
+  * the collective schedule — parsed from the optimized HLO to get
+    per-collective wire bytes (not available in cost_analysis).
+
+Results are cached as JSON per cell (``results/dryrun/<arch>__<shape>__
+<mesh>.json``) so reruns are incremental.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, LM_SHAPES, ShapeSpec
+from repro.configs.registry import ASSIGNED, ALL_ARCHS, cell_supported, get_config
+from repro.data.synthetic import make_batch_struct
+from repro.launch.mesh import make_production_mesh, mesh_axes_of
+from repro.models import transformer as T
+from repro.models.registry import build_model
+from repro.optim.adamw import OptConfig, init_opt
+from repro.parallel import sharding as shd
+from repro.runtime.train_loop import make_train_step
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))),
+    "results", "dryrun",
+)
+
+# -- collective parsing ------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\w+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_OPERAND_RE = re.compile(r"\(\s*(\w+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str, default_group: int = 16) -> dict:
+    """Sum per-device wire bytes for every collective in the optimized HLO.
+
+    Ring-algorithm wire model per participating device:
+      all-reduce        2 * B * (n-1)/n
+      all-gather        B_out * (n-1)/n
+      reduce-scatter    B_in * (n-1)/n
+      all-to-all        B * (n-1)/n
+      collective-permute B
+    """
+    per_kind_bytes: dict[str, float] = {}
+    per_kind_count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        out_bytes = _shape_bytes(dtype, dims)
+        om = _OPERAND_RE.search(line[m.end() - 1:])
+        in_bytes = _shape_bytes(om.group(1), om.group(2)) if om else out_bytes
+        gi = _GROUPS_IOTA_RE.search(line)
+        if gi:
+            n = int(gi.group(2))
+        else:
+            gb = _GROUPS_BRACE_RE.search(line)
+            n = len(gb.group(1).split(",")) if gb else default_group
+        n = max(2, n)
+        f = (n - 1) / n
+        if kind == "all-reduce":
+            wire = 2.0 * out_bytes * f
+        elif kind == "all-gather":
+            wire = out_bytes * f
+        elif kind == "reduce-scatter":
+            wire = in_bytes * f
+        elif kind == "all-to-all":
+            wire = out_bytes * f
+        else:  # collective-permute
+            wire = out_bytes
+        per_kind_bytes[kind] = per_kind_bytes.get(kind, 0.0) + wire
+        per_kind_count[kind] = per_kind_count.get(kind, 0) + 1
+    return {
+        "wire_bytes_per_device": sum(per_kind_bytes.values()),
+        "by_kind_bytes": per_kind_bytes,
+        "by_kind_count": per_kind_count,
+    }
+
+
+# -- step builders ------------------------------------------------------------
+
+
+def _struct_params(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda k: T.init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+
+
+# --tag variants: perf-iteration levers applied on top of the baseline.
+VARIANTS: dict[str, dict] = {
+    "": {},
+    "v2": {},                      # improved decode/serve sharding (code-level)
+    "flashattn": {"attn_chunk": 512},
+    "chunkloss": {"loss_chunk": 256},
+    "bf16": {"param_dtype": "bfloat16"},
+    "opt8": {"_quant_opt": True},
+    "nocap": {"capacity_factor": 1.0},
+    "perf": {"attn_chunk": 512, "loss_chunk": 256,
+             "param_dtype": "bfloat16", "_quant_opt": True},
+    "perf_nocap": {"attn_chunk": 512, "loss_chunk": 256,
+                   "param_dtype": "bfloat16", "_quant_opt": True,
+                   "capacity_factor": 1.0},
+}
+
+
+def apply_variant(cfg: ArchConfig, tag: str) -> tuple[ArchConfig, bool]:
+    opts = dict(VARIANTS.get(tag, {}))
+    quant = opts.pop("_quant_opt", False)
+    if opts:
+        cfg = dataclasses.replace(cfg, **opts)
+    return cfg, quant
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
+               moe_train_backend: str = "collective",
+               quant_opt: bool = False):
+    """Returns (fn, arg_structs, in_shardings) for this cell."""
+    ax_info = mesh_axes_of(mesh)
+    data_size = 1
+    for a in ax_info["data_axes"]:
+        data_size *= mesh.shape[a]
+    axes = shd.MeshAxes(
+        data=ax_info["data_axes"],
+        data_size=data_size,
+        model_size=mesh.shape["model"],
+    )
+    token_axes = ax_info["token_axes"]
+    model = build_model(cfg)
+    params_s = _struct_params(cfg)
+    if cfg.param_dtype == "bfloat16":
+        params_s = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+            if s.ndim >= 2 else s, params_s,
+        )
+    # FSDP only pays off when every step touches all shards (training);
+    # serving keeps params TP/EP-sharded to avoid per-token all-gathers.
+    fsdp = cfg.is_moe and shape.kind == "train"
+    pspecs = shd.param_specs(params_s, cfg, axes, fsdp=fsdp)
+    psh = shd.shardings_for(mesh, pspecs)
+    batch_s = make_batch_struct(cfg, shape)
+    bspecs = shd.batch_specs(cfg, shape, axes)
+    bsh = {k: NamedSharding(mesh, bspecs[k]) for k in batch_s}
+
+    if shape.kind == "train":
+        opt_s = jax.eval_shape(
+            lambda p: init_opt(p, quantize=quant_opt), params_s
+        )
+        mu_specs = shd.param_specs(opt_s.mu, cfg, axes, fsdp=fsdp)
+        osh = type(opt_s)(
+            mu=shd.shardings_for(mesh, mu_specs),
+            nu=shd.shardings_for(mesh, mu_specs),
+            step=NamedSharding(mesh, P()),
+        )
+        backend = moe_train_backend if cfg.is_moe else "gathered"
+        fn = make_train_step(
+            lambda p, b: model.loss(
+                p, b, moe_backend=backend, mesh=mesh,
+                moe_token_axes=token_axes,
+            ),
+            OptConfig(),
+            donate=False,
+            jit=False,
+        )
+        args = (params_s, opt_s, batch_s)
+        in_sh = (psh, osh, bsh)
+        donate = ()
+
+    elif shape.kind == "prefill":
+        backend = moe_train_backend if cfg.is_moe else "gathered"
+
+        def fn(params, batch):
+            logits, caches, _mem = model.prefill(
+                params, batch, moe_backend=backend, mesh=mesh,
+                moe_token_axes=token_axes,
+            )
+            return logits, caches
+
+        args = (params_s, batch_s)
+        in_sh = (psh, bsh)
+        donate = ()
+
+    else:  # decode
+        B = shape.global_batch
+        caches_s = jax.eval_shape(
+            lambda: T.init_caches(cfg, B, shape.seq_len, cfg.jdtype)
+        )
+        cspecs = shd.cache_specs(cfg, shape, caches_s, axes)
+        csh = shd.shardings_for(mesh, cspecs)
+        backend = "replicated" if cfg.is_moe else "gathered"
+        dp_axes = tuple(a for a in token_axes if a != "model")
+        moe_axes = (dp_axes + ("model",)) if B >= 16 else ("model",)
+        tokens_s = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+
+        if cfg.family == "audio":
+            # enc-dec decode cross-attends to the (stub) encoder memory.
+            mem_s = jax.ShapeDtypeStruct(
+                (B, shape.seq_len, cfg.d_model), cfg.jdtype
+            )
+            b_ax = bspecs["tokens"][0]
+
+            def fn(params, tokens, caches, pos, memory):
+                return model.decode_step(
+                    params, tokens, caches, pos, memory=memory,
+                    moe_backend=backend, mesh=mesh, moe_token_axes=moe_axes,
+                )
+
+            donate = (2,)
+            args = (params_s, tokens_s, caches_s, pos_s, mem_s)
+            in_sh = (
+                psh,
+                NamedSharding(mesh, bspecs["tokens"]),
+                csh,
+                NamedSharding(mesh, P()),
+                NamedSharding(mesh, P(b_ax, None, None)),
+            )
+            return fn, args, in_sh, donate
+
+        def fn(params, tokens, caches, pos):
+            return model.decode_step(
+                params, tokens, caches, pos,
+                moe_backend=backend, mesh=mesh, moe_token_axes=moe_axes,
+            )
+
+        donate = (2,)
+        args = (params_s, tokens_s, caches_s, pos_s)
+        in_sh = (
+            psh,
+            NamedSharding(mesh, bspecs["tokens"]),
+            csh,
+            NamedSharding(mesh, P()),
+        )
+    return fn, args, in_sh, donate
+
+
+def _analyze(compiled) -> dict:
+    out = {}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        out["flops"] = float(ca.get("flops", 0.0))
+        out["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+    except Exception as e:
+        out["error"] = repr(e)
+    try:
+        out["collectives"] = parse_collectives(compiled.as_text())
+    except Exception as e:
+        out["collectives"] = {"error": repr(e)}
+    return out
+
+
+def _lower_compile(cfg, shape, mesh, moe_train_backend, *,
+                   quant_opt: bool = False):
+    fn, args, in_sh, donate = build_cell(
+        cfg, shape, mesh, moe_train_backend=moe_train_backend,
+        quant_opt=quant_opt,
+    )
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(
+            fn, in_shardings=in_sh, donate_argnums=donate
+        ).lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def extrapolate_roofline(cfg: ArchConfig, shape: ShapeSpec, mesh,
+                         moe_train_backend: str,
+                         quant_opt: bool = False) -> dict:
+    """Two-point depth extrapolation for loop-undercounted cost analysis.
+
+    XLA's cost_analysis counts a while-loop body once regardless of trip
+    count, so the scan-over-periods program under-reports FLOPs / bytes /
+    collective traffic.  Lowering the same cell at depth = 1 and 2 pattern
+    periods gives F1 (fixed costs + one period) and F2 - F1 (exactly one
+    period, fwd+bwd+optimizer); the true totals are
+    ``F1 + (F2-F1) * (n_periods - 1 + n_rem/period)``.
+    """
+    period = len(cfg.pattern)
+    n_per, n_rem = cfg.n_periods()
+    enc = cfg.n_encoder_layers
+
+    def mini(n):
+        c = dataclasses.replace(
+            cfg, n_layers=n * period,
+            n_encoder_layers=min(enc, max(1, n)) if enc else 0,
+        )
+        _, compiled = _lower_compile(c, shape, mesh, moe_train_backend,
+                                     quant_opt=quant_opt)
+        return _analyze(compiled)
+
+    a1 = mini(1)
+    a2 = mini(2)
+    if "error" in a1 or "error" in a2:
+        return {"error": a1.get("error") or a2.get("error")}
+    mult = (n_per - 1) + (n_rem / period)
+    if enc and enc > 2:
+        # encoder layers scale alongside (same two-point slope)
+        mult_note = "encoder folded into period slope"
+    out = {
+        "flops": a1["flops"] + (a2["flops"] - a1["flops"]) * mult,
+        "bytes_accessed": a1["bytes_accessed"]
+        + (a2["bytes_accessed"] - a1["bytes_accessed"]) * mult,
+        "per_period_flops": a2["flops"] - a1["flops"],
+        "fixed_flops": 2 * a1["flops"] - a2["flops"],
+    }
+    c1 = a1["collectives"].get("wire_bytes_per_device", 0.0)
+    c2 = a2["collectives"].get("wire_bytes_per_device", 0.0)
+    out["wire_bytes_per_device"] = c1 + (c2 - c1) * mult
+    out["by_kind_bytes"] = {
+        k: a1["collectives"]["by_kind_bytes"].get(k, 0.0)
+        + (a2["collectives"]["by_kind_bytes"].get(k, 0.0)
+           - a1["collectives"]["by_kind_bytes"].get(k, 0.0)) * mult
+        for k in set(a1["collectives"]["by_kind_bytes"])
+        | set(a2["collectives"]["by_kind_bytes"])
+    }
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             force: bool = False, moe_train_backend: str = "collective",
+             out_dir: str = RESULTS_DIR, tag: str = "") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    out_path = os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+    )
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    cfg, quant_opt = apply_variant(cfg, tag)
+    shape = LM_SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "kind": shape.kind, "tag": tag,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if not ok:
+        rec.update(status="SKIP", reason=why)
+        _write(out_path, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        lowered, compiled = _lower_compile(cfg, shape, mesh,
+                                           moe_train_backend,
+                                           quant_opt=quant_opt)
+        t_lower = 0.0
+        t_compile = time.time() - t0
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(
+                    mem, "peak_memory_in_bytes",
+                    getattr(mem, "temp_size_in_bytes", None),
+                ),
+            }
+        except Exception as e:
+            rec["memory"] = {"error": repr(e)}
+        try:
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+            rec["cost"] = {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+                "transcendentals": float(ca.get("transcendentals", 0.0)),
+            }
+        except Exception as e:
+            rec["cost"] = {"error": repr(e)}
+        try:
+            hlo = compiled.as_text()
+            rec["collectives"] = parse_collectives(hlo)
+            rec["hlo_lines"] = hlo.count("\n")
+        except Exception as e:
+            rec["collectives"] = {"error": repr(e)}
+        # Loop-aware roofline terms (scan bodies undercounted otherwise).
+        rec["extrapolated"] = extrapolate_roofline(
+            cfg, shape, mesh, moe_train_backend, quant_opt
+        )
+        rec.update(
+            status="OK",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            n_devices=int(mesh.size),
+        )
+    except Exception as e:
+        rec.update(
+            status="FAIL",
+            error=f"{type(e).__name__}: {e}",
+            traceback=traceback.format_exc()[-4000:],
+        )
+    _write(out_path, rec)
+    return rec
+
+
+def _write(path: str, rec: dict):
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    os.replace(tmp, path)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(LM_SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="all assigned archs x shapes")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="variant tag for perf iters")
+    ap.add_argument("--moe-backend", default="collective",
+                    choices=["collective", "megakernel"])
+    args = ap.parse_args(argv)
+
+    archs = list(ASSIGNED) if args.all or not args.arch else [args.arch]
+    shapes = list(LM_SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                rec = run_cell(
+                    arch, shape, mk, force=args.force,
+                    moe_train_backend=args.moe_backend, tag=args.tag,
+                )
+                status = rec["status"]
+                extra = ""
+                if status == "OK":
+                    coll = rec.get("collectives", {})
+                    extra = (
+                        f" flops={rec['cost'].get('flops', 0):.3g}"
+                        f" wireB={coll.get('wire_bytes_per_device', 0):.3g}"
+                        f" compile={rec.get('compile_s')}s"
+                    )
+                elif status == "FAIL":
+                    n_fail += 1
+                    extra = " " + rec.get("error", "")[:160]
+                elif status == "SKIP":
+                    extra = " " + rec.get("reason", "")[:80]
+                print(f"[dryrun] {arch:20s} {shape:12s} {mk:6s} {status}{extra}",
+                      flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run must set
+``XLA_FLAGS`` before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_axes_of", "SINGLE_POD", "MULTI_POD"]
+
+SINGLE_POD = (16, 16)              # 256 chips
+MULTI_POD = (2, 16, 16)            # 2 pods x 256 chips = 512
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes_of(mesh) -> dict:
+    """Axis-name bundle used by sharding rules."""
+    names = mesh.axis_names
+    data_axes = tuple(a for a in names if a in ("pod", "data"))
+    return {
+        "data_axes": data_axes,
+        "model_axis": "model",
+        "token_axes": data_axes + ("model",),
+        "n_chips": int(mesh.size),
+    }

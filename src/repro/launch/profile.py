@@ -1,0 +1,115 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run profiler: inspect a compiled cell's HLO without hardware.
+
+This is the "profile" of the perf loop (DESIGN.md §Perf hints): with no
+wall-clock trace available, the evidence is the lowered IR — biggest
+tensors (VMEM/HBM pressure, f32 round-trips), the collective schedule, and
+op-class histograms.  The §Perf iterations in EXPERIMENTS.md were driven
+by exactly these views (e.g. the f32 convert/slice round-trips of stacked
+expert weights, and GSPMD's involuntary cache replication).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.profile --arch dbrx-132b \
+        --shape decode_32k --tag perf --top 15
+"""
+
+import argparse
+import dataclasses
+import re
+import sys
+from collections import Counter
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4, "s16": 2,
+    "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+}
+
+_TENSOR_RE = re.compile(r"(f64|f32|bf16|f16|s32|s8|u32|u8|pred)\[([\d,]+)\]")
+_OP_RE = re.compile(r"=\s*\w+\[[\d,]*\][^ ]*\s+([a-z][\w-]*)\(")
+
+
+def tensor_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def top_tensors(hlo: str, top: int = 12, min_mb: float = 32.0):
+    sizes: Counter = Counter()
+    for m in _TENSOR_RE.finditer(hlo):
+        b = tensor_bytes(m.group(1), m.group(2))
+        if b >= min_mb * 1e6:
+            sizes[f"{m.group(1)}[{m.group(2)}]"] += 1
+    rows = sorted(
+        ((tensor_bytes(*k.replace("]", "").split("[")), cnt, k)
+         for k, cnt in sizes.items()),
+        reverse=True,
+    )
+    return rows[:top]
+
+
+def op_histogram(hlo: str, top: int = 12):
+    ops: Counter = Counter()
+    for m in _OP_RE.finditer(hlo):
+        ops[m.group(1)] += 1
+    return ops.most_common(top)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--layers", type=int, default=2,
+                    help="depth to lower (small = readable HLO)")
+    ap.add_argument("--top", type=int, default=12)
+    ap.add_argument("--min-mb", type=float, default=32.0)
+    args = ap.parse_args(argv)
+
+    from repro.configs.base import LM_SHAPES
+    from repro.configs.registry import get_config
+    from repro.launch import dryrun
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(args.arch)
+    cfg, quant = dryrun.apply_variant(cfg, args.tag)
+    period = len(cfg.pattern)
+    cfg = dataclasses.replace(
+        cfg, n_layers=max(period, args.layers * period)
+    )
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    _, compiled = dryrun._lower_compile(
+        cfg, LM_SHAPES[args.shape], mesh, "collective", quant_opt=quant
+    )
+    hlo = compiled.as_text()
+    mem = compiled.memory_analysis()
+
+    print(f"# {args.arch} x {args.shape} x {args.mesh}"
+          f"{' x ' + args.tag if args.tag else ''} "
+          f"(lowered at {cfg.n_layers} layers)")
+    print(f"memory: arg={mem.argument_size_in_bytes/1e9:.2f}GB "
+          f"temp={mem.temp_size_in_bytes/1e9:.2f}GB "
+          f"out={mem.output_size_in_bytes/1e9:.2f}GB")
+    print(f"\n## top tensors (>= {args.min_mb:.0f} MB)")
+    for b, cnt, k in top_tensors(hlo, args.top, args.min_mb):
+        print(f"  {b/1e6:9.1f} MB x{cnt:<3d} {k}")
+    print("\n## collective schedule")
+    coll = dryrun.parse_collectives(hlo)
+    for kind, cnt in sorted(coll["by_kind_count"].items()):
+        by = coll["by_kind_bytes"].get(kind, 0.0)
+        print(f"  {kind:20s} x{cnt:<4d} {by/1e9:9.3f} GB wire/device")
+    print("\n## op histogram")
+    for op, cnt in op_histogram(hlo, args.top):
+        print(f"  {op:24s} x{cnt}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

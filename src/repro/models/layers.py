@@ -1,0 +1,555 @@
+"""Primitive neural blocks shared by the model zoo.
+
+Pure functions over parameter pytrees (nested dicts of arrays) — no module
+framework.  Every mixer implements three entry points used by the decoder:
+
+  ``init(key, cfg)``                         -> params
+  ``fwd(params, cfg, x, ...)``               -> y                (train/prefill)
+  ``step(params, cfg, x_t, cache, pos)``     -> (y_t, new_cache) (decode)
+
+Attention defaults to the XLA path (portable: CPU dry-run, TPU); the Pallas
+flash-attention / SSD kernels in ``repro.kernels`` are the TPU fast path and
+are validated against the same math in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+__all__ = [
+    "rms_norm", "init_rms", "rope",
+    "init_attention", "attention_fwd", "attention_step", "init_kv_cache",
+    "init_mlp", "mlp_fwd",
+    "init_rglru", "rglru_fwd", "rglru_step", "init_rglru_cache",
+    "init_ssd", "ssd_fwd", "ssd_step", "init_ssd_cache",
+    "init_embedding", "embed", "unembed",
+]
+
+Params = dict
+
+
+def _dense_init(key, shape, scale_axis=0):
+    scale = 1.0 / math.sqrt(shape[scale_axis])
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+# --------------------------------------------------------------------------
+# norm / rope / embedding
+# --------------------------------------------------------------------------
+
+
+def init_rms(d: int) -> Params:
+    return {"scale": jnp.ones((d,), dtype=jnp.float32)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["scale"]).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., T, n_heads, head_dim); positions: (..., T)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs     # (..., T, half)
+    ang = ang[..., None, :]                                     # head axis
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def init_embedding(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": _dense_init(k1, (cfg.vocab, cfg.d_model), 1)}
+    if not cfg.tie_embeddings:
+        p["head"] = _dense_init(k2, (cfg.d_model, cfg.vocab))
+    return p
+
+
+def embed(p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    return p["tok"].astype(dtype)[tokens]
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    w = p.get("head")
+    if w is None:
+        w = p["tok"].T
+    # f32 accumulation without materializing an f32 copy of the (possibly
+    # vocab-sharded, bf16) embedding table.
+    return jnp.einsum(
+        "...h,hv->...v", x.astype(w.dtype), w,
+        preferred_element_type=jnp.float32,
+    )
+
+
+# --------------------------------------------------------------------------
+# attention (GQA, optional sliding window, optional cross-attention)
+# --------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig) -> Params:
+    H, hd = cfg.d_model, cfg.hdim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], (H, nq * hd)),
+        "wk": _dense_init(ks[1], (H, nkv * hd)),
+        "wv": _dense_init(ks[2], (H, nkv * hd)),
+        "wo": _dense_init(ks[3], (nq * hd, H)),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _sdpa(q, k, v, mask) -> jax.Array:
+    """q: (B,Tq,nq,hd) k,v: (B,Tk,nkv,hd); GQA via head grouping."""
+    B, Tq, nq, hd = q.shape
+    nkv = k.shape[2]
+    g = nq // nkv
+    # f32 accumulation via preferred_element_type: never materializes an
+    # f32 copy of K/V (a cache-sized cast dominated decode HBM traffic).
+    qf = q.reshape(B, Tq, nkv, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k,
+                   preferred_element_type=jnp.float32)
+    s = s * (hd ** -0.5)
+    if mask is not None:
+        s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Tq, nq, hd).astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, window: int, chunk: int,
+                  q_offset: int = 0) -> jax.Array:
+    """Blockwise online-softmax attention in pure jnp (flash-style).
+
+    Never materializes the (Tq, Tk) score matrix: scans KV chunks carrying
+    running (max, normalizer, accumulator).  This is the XLA twin of
+    ``kernels/flash_attention.py`` for hosts/backends where the Pallas
+    kernel isn't available; on TPU the kernel is the fast path.
+    """
+    B, Tq, nq, hd = q.shape
+    Tk = k.shape[1]
+    nkv = k.shape[2]
+    g = nq // nkv
+    nchunks = max(1, Tk // chunk)
+    chunk = Tk // nchunks
+    qf = q.astype(jnp.float32).reshape(B, Tq, nkv, g, hd) * (hd ** -0.5)
+    kc = k.astype(jnp.float32).reshape(B, nchunks, chunk, nkv, hd)
+    vc = v.astype(jnp.float32).reshape(B, nchunks, chunk, nkv, hd)
+    iq = q_offset + jnp.arange(Tq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kcb, vcb, c_idx = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kcb)
+        ik = c_idx * chunk + jnp.arange(chunk)
+        mask = iq[:, None] >= ik[None, :] if causal else jnp.ones(
+            (Tq, chunk), bool)
+        if window > 0:
+            mask &= (iq[:, None] - ik[None, :]) < window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vcb)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, nkv, g, Tq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, nkv, g, Tq), jnp.float32)
+    a0 = jnp.zeros((B, nkv, g, Tq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         jnp.arange(nchunks)),
+    )
+    out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, nq, hd)
+    return out.astype(q.dtype)
+
+
+def _causal_mask(Tq: int, Tk: int, window: int) -> jax.Array:
+    iq = jnp.arange(Tq)[:, None] + (Tk - Tq)
+    ik = jnp.arange(Tk)[None, :]
+    m = iq >= ik
+    if window > 0:
+        m &= (iq - ik) < window
+    return m[None]  # (1, Tq, Tk)
+
+
+def attention_fwd(
+    p: Params, cfg: ArchConfig, x: jax.Array, *,
+    positions: jax.Array, window: int = 0, causal: bool = True,
+    memory: jax.Array | None = None,
+) -> jax.Array:
+    """Full-sequence attention. x: (B, T, H). memory: (B, Tm, H) for cross."""
+    B, T, _ = x.shape
+    hd = cfg.hdim
+    q = _split_heads(x @ p["wq"].astype(x.dtype), cfg.n_heads, hd)
+    src = memory if memory is not None else x
+    k = _split_heads(src @ p["wk"].astype(x.dtype), cfg.n_kv_heads, hd)
+    v = _split_heads(src @ p["wv"].astype(x.dtype), cfg.n_kv_heads, hd)
+    if memory is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if cfg.attn_chunk > 0 and T >= 2 * cfg.attn_chunk:
+            o = _sdpa_chunked(q, k, v, causal=causal, window=window,
+                              chunk=cfg.attn_chunk)
+            return o.reshape(B, T, -1) @ p["wo"].astype(x.dtype)
+        mask = _causal_mask(T, T, window) if causal else None
+    else:
+        mask = None
+    o = _sdpa(q, k, v, mask)
+    return o.reshape(B, T, -1) @ p["wo"].astype(x.dtype)
+
+
+def init_kv_cache(
+    cfg: ArchConfig, batch: int, max_len: int, window: int, dtype
+) -> Params:
+    S = min(max_len, window) if window > 0 else max_len
+    shape = (batch, S, cfg.n_kv_heads, cfg.hdim)
+    return {
+        "k": jnp.zeros(shape, dtype=dtype),
+        "v": jnp.zeros(shape, dtype=dtype),
+    }
+
+
+def attention_step(
+    p: Params, cfg: ArchConfig, x_t: jax.Array, cache: Params,
+    pos: jax.Array, *, window: int = 0, memory: jax.Array | None = None,
+) -> tuple[jax.Array, Params]:
+    """One decode step. x_t: (B, 1, H); pos: scalar int (current index)."""
+    B = x_t.shape[0]
+    hd = cfg.hdim
+    q = _split_heads(x_t @ p["wq"].astype(x_t.dtype), cfg.n_heads, hd)
+    if memory is not None:
+        # Cross-attention: static memory, no cache update.
+        k = _split_heads(memory @ p["wk"].astype(x_t.dtype), cfg.n_kv_heads, hd)
+        v = _split_heads(memory @ p["wv"].astype(x_t.dtype), cfg.n_kv_heads, hd)
+        o = _sdpa(q, k, v, None)
+        return o.reshape(B, 1, -1) @ p["wo"].astype(x_t.dtype), cache
+
+    posv = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k_t = _split_heads(x_t @ p["wk"].astype(x_t.dtype), cfg.n_kv_heads, hd)
+    v_t = _split_heads(x_t @ p["wv"].astype(x_t.dtype), cfg.n_kv_heads, hd)
+    k_t = rope(k_t, posv, cfg.rope_theta)
+
+    S = cache["k"].shape[1]
+    slot = jnp.mod(pos, S) if window > 0 else pos
+    # Masked-blend update instead of dynamic_update_slice: elementwise ops
+    # keep the cache's sequence sharding intact (GSPMD replicates a whole
+    # cache shard to reshard an in-place update on a sharded dim — tens of
+    # GB per layer for 32K-context serving).
+    onehot = (jnp.arange(S) == slot)[None, :, None, None]
+    k = jnp.where(onehot, k_t.astype(cache["k"].dtype), cache["k"])
+    v = jnp.where(onehot, v_t.astype(cache["v"].dtype), cache["v"])
+
+    # Validity: ring buffer holds the last min(pos+1, S) entries.
+    idx = jnp.arange(S)
+    if window > 0:
+        valid = (idx <= pos) if True else None
+        # entry i holds absolute position with same residue; valid if within
+        # the last `window` positions and <= pos.
+        abs_pos = pos - jnp.mod(pos - idx, S)
+        valid = (abs_pos >= 0) & (abs_pos >= pos - (S - 1))
+    else:
+        valid = idx <= pos
+    mask = valid[None, None, :]                     # (1, 1, S)
+    nkv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    qf = q.reshape(B, 1, nkv, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k,
+                   preferred_element_type=jnp.float32)
+    s = s * (hd ** -0.5)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", pattn.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, -1).astype(x_t.dtype)
+    out = o @ p["wo"].astype(x_t.dtype)
+    return out, {"k": k, "v": v}
+
+
+# --------------------------------------------------------------------------
+# gated MLP
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ArchConfig) -> Params:
+    H, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": _dense_init(k1, (H, F)),
+        "w3": _dense_init(k3, (H, F)),
+        "w2": _dense_init(k2, (F, H)),
+    }
+
+
+def mlp_fwd(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w1"].astype(x.dtype)) * (x @ p["w3"].astype(x.dtype))
+    return h @ p["w2"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma) with short conv
+# --------------------------------------------------------------------------
+
+
+def init_rglru(key, cfg: ArchConfig) -> Params:
+    H = cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "conv_w": _dense_init(ks[0], (cfg.conv_kernel, H), 0) * 0.1,
+        "conv_b": jnp.zeros((H,), dtype=jnp.float32),
+        "wr": _dense_init(ks[1], (H, H)),
+        "wi": _dense_init(ks[2], (H, H)),
+        # a-parameter init so decay ~ U[0.9, 0.999] (Griffin appendix):
+        # softplus(a_raw) = (-log u)^(1/c)  =>  a = exp(-c * softplus * r).
+        "a_raw": jnp.log(
+            jnp.expm1(
+                (-jnp.log(jax.random.uniform(
+                    ks[3], (H,), minval=0.9, maxval=0.999
+                ))) ** (1.0 / cfg.rglru_c)
+            )
+        ).astype(jnp.float32),
+        "wo": _dense_init(ks[4], (H, H)),
+    }
+
+
+def _rglru_gates(p, cfg, x):
+    r = jax.nn.sigmoid(x @ p["wr"].astype(x.dtype))
+    i = jax.nn.sigmoid(x @ p["wi"].astype(x.dtype))
+    log_a = (
+        -cfg.rglru_c
+        * jax.nn.softplus(p["a_raw"]).astype(jnp.float32)
+        * r.astype(jnp.float32)
+    )                                                  # (B, T, H), <= 0
+    return i, log_a
+
+
+def _conv1d_fwd(p, x):
+    """Causal depthwise conv over time. x: (B, T, H)."""
+    K = p["conv_w"].shape[0]
+    pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        pads[:, i : i + x.shape[1], :] * p["conv_w"][i].astype(x.dtype)
+        for i in range(K)
+    )
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def rglru_fwd(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence RG-LRU via associative scan. x: (B, T, H)."""
+    xc = _conv1d_fwd(p, x)
+    i, log_a = _rglru_gates(p, cfg, xc)
+    gated = (
+        jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+        * (i * xc).astype(jnp.float32)
+    )
+
+    def combine(c1, c2):
+        a1, h1 = c1
+        a2, h2 = c2
+        return a1 + a2, h1 * jnp.exp(a2) + h2
+
+    _, h = jax.lax.associative_scan(
+        combine, (log_a, gated), axis=1
+    )
+    return (h.astype(x.dtype)) @ p["wo"].astype(x.dtype)
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    H = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, H), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, H), dtype=dtype),
+    }
+
+
+def rglru_step(
+    p: Params, cfg: ArchConfig, x_t: jax.Array, cache: Params, pos
+) -> tuple[jax.Array, Params]:
+    """x_t: (B, 1, H)."""
+    K = p["conv_w"].shape[0]
+    hist = jnp.concatenate([cache["conv"], x_t], axis=1)   # (B, K, H)
+    xc = jnp.einsum(
+        "bkh,kh->bh", hist.astype(jnp.float32), p["conv_w"]
+    ) + p["conv_b"]
+    xc = xc[:, None, :].astype(x_t.dtype)                   # (B, 1, H)
+    i, log_a = _rglru_gates(p, cfg, xc)
+    a = jnp.exp(log_a[:, 0])                                # (B, H)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-6)) * (
+        (i * xc)[:, 0].astype(jnp.float32)
+    )
+    h = cache["h"] * a + gated
+    out = (h[:, None, :].astype(x_t.dtype)) @ p["wo"].astype(x_t.dtype)
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+# --------------------------------------------------------------------------
+# SSD (Mamba-2)
+# --------------------------------------------------------------------------
+
+
+def _ssd_dims(cfg: ArchConfig) -> tuple[int, int, int]:
+    dh = cfg.ssm_head_dim
+    inner = cfg.ssm_expand * cfg.d_model
+    nh = max(1, inner // dh)
+    return nh, dh, cfg.ssm_state
+
+
+def init_ssd(key, cfg: ArchConfig) -> Params:
+    H = cfg.d_model
+    nh, dh, N = _ssd_dims(cfg)
+    inner = nh * dh
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": _dense_init(ks[0], (H, inner)),
+        "in_z": _dense_init(ks[1], (H, inner)),          # output gate
+        "in_b": _dense_init(ks[2], (H, N)),
+        "in_c": _dense_init(ks[3], (H, N)),
+        "in_dt": _dense_init(ks[4], (H, nh)),
+        "dt_bias": jnp.zeros((nh,), dtype=jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "d_skip": jnp.ones((nh,), dtype=jnp.float32),
+        "conv_w": _dense_init(ks[5], (cfg.conv_kernel, inner), 0) * 0.1,
+        "conv_b": jnp.zeros((inner,), dtype=jnp.float32),
+        "out": _dense_init(ks[5], (inner, H)),
+    }
+
+
+def _ssd_proj(p, cfg, u):
+    nh, dh, N = _ssd_dims(cfg)
+    x = u @ p["in_x"].astype(u.dtype)                   # (B, T, inner)
+    z = u @ p["in_z"].astype(u.dtype)
+    bmat = u @ p["in_b"].astype(u.dtype)                # (B, T, N)
+    cmat = u @ p["in_c"].astype(u.dtype)
+    dt = jax.nn.softplus(
+        (u @ p["in_dt"].astype(u.dtype)).astype(jnp.float32) + p["dt_bias"]
+    )                                                   # (B, T, nh)
+    return x, z, bmat, cmat, dt
+
+
+def ssd_fwd(p: Params, cfg: ArchConfig, u: jax.Array, *,
+            chunk: int = 128) -> jax.Array:
+    """Full-sequence SSD via chunked jnp (same math as kernels/ssd_scan)."""
+    B, T, H = u.shape
+    nh, dh, N = _ssd_dims(cfg)
+    x, z, bmat, cmat, dt = _ssd_proj(p, cfg, u)
+    x = _conv1d_fwd({"conv_w": p["conv_w"], "conv_b": p["conv_b"]}, x)
+    x = jax.nn.silu(x)
+    xh = x.reshape(B, T, nh, dh)
+    a = -jnp.exp(p["a_log"])                            # (nh,), negative
+
+    Lc = min(chunk, T)
+    if T % Lc:
+        Lc = math.gcd(T, Lc) or 1
+    nchunks = T // Lc
+
+    # Broadcast B/C across heads (mamba2 shares B,C per head-group; G=1).
+    bm = jnp.broadcast_to(bmat[:, :, None, :], (B, T, nh, N))
+    cm = jnp.broadcast_to(cmat[:, :, None, :], (B, T, nh, N))
+
+    def reshape_chunks(t):  # (B, T, ...) -> (B, nchunks, Lc, ...)
+        return t.reshape((B, nchunks, Lc) + t.shape[2:])
+
+    xc = reshape_chunks(xh).astype(jnp.float32)
+    bc = reshape_chunks(bm).astype(jnp.float32)
+    cc = reshape_chunks(cm).astype(jnp.float32)
+    dtc = reshape_chunks(dt)                            # (B, nc, Lc, nh)
+
+    la = dtc * a                                        # (B, nc, Lc, nh)
+    cum = jnp.cumsum(la, axis=2)
+
+    def chunk_step(state, inp):
+        xcb, bcb, ccb, dtb, lab, cumb = inp             # per-chunk slices
+        # state: (B, nh, N, dh)
+        y_inter = jnp.einsum("blhn,bhnd->blhd", ccb, state) * jnp.exp(
+            cumb
+        )[..., None]
+        scores = jnp.einsum("blhn,bshn->bhls", ccb, bcb)
+        Lcc = xcb.shape[1]
+        mask = jnp.tril(jnp.ones((Lcc, Lcc), dtype=bool))
+        # Mask the log-decay *before* exp: the upper triangle holds large
+        # positive differences that would overflow and poison the masked
+        # product with inf*0 = NaN.
+        ldiff = (cumb.transpose(0, 2, 1)[:, :, :, None]
+                 - cumb.transpose(0, 2, 1)[:, :, None, :])
+        decay = jnp.exp(jnp.where(mask, ldiff, -jnp.inf))
+        m = scores * decay * dtb.transpose(0, 2, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhls,bshd->blhd", m, xcb)
+        total = cumb[:, -1]                             # (B, nh)
+        w = jnp.exp(total[:, None] - cumb) * dtb        # (B, Lc, nh)
+        new_state = state * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "blhn,blhd->bhnd", bcb * w[..., None], xcb
+        )
+        return new_state, y_inter + y_intra
+
+    s0 = jnp.zeros((B, nh, N, dh), dtype=jnp.float32)
+    xs = (
+        xc.transpose(1, 0, 2, 3, 4), bc.transpose(1, 0, 2, 3, 4),
+        cc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+        la.transpose(1, 0, 2, 3), cum.transpose(1, 0, 2, 3),
+    )
+    _, ys = jax.lax.scan(chunk_step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, nh, dh)
+    y = y + p["d_skip"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, T, nh * dh).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out"].astype(u.dtype)
+
+
+def init_ssd_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    nh, dh, N = _ssd_dims(cfg)
+    inner = nh * dh
+    return {
+        "s": jnp.zeros((batch, nh, N, dh), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, inner), dtype=dtype),
+    }
+
+
+def ssd_step(
+    p: Params, cfg: ArchConfig, u_t: jax.Array, cache: Params, pos
+) -> tuple[jax.Array, Params]:
+    """One decode step. u_t: (B, 1, H)."""
+    B = u_t.shape[0]
+    nh, dh, N = _ssd_dims(cfg)
+    x, z, bmat, cmat, dt = _ssd_proj(p, cfg, u_t)
+    hist = jnp.concatenate([cache["conv"], x], axis=1)
+    xc = jnp.einsum(
+        "bkh,kh->bh", hist.astype(jnp.float32), p["conv_w"]
+    ) + p["conv_b"]
+    xc = jax.nn.silu(xc)                                  # (B, inner)
+    xh = xc.reshape(B, nh, dh)
+    a = -jnp.exp(p["a_log"])
+    dt0 = dt[:, 0]                                        # (B, nh)
+    decay = jnp.exp(dt0 * a)                              # (B, nh)
+    bm = bmat[:, 0].astype(jnp.float32)                   # (B, N)
+    cm = cmat[:, 0].astype(jnp.float32)
+    s = cache["s"] * decay[..., None, None] + (
+        dt0[..., None, None]
+        * bm[:, None, :, None]
+        * xh[:, :, None, :]
+    )
+    y = jnp.einsum("bn,bhnd->bhd", cm, s)
+    y = y + p["d_skip"][:, None] * xh
+    y = y.reshape(B, 1, nh * dh).astype(u_t.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out"].astype(u_t.dtype)
+    return out, {"s": s, "conv": hist[:, 1:]}

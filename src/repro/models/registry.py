@@ -1,0 +1,103 @@
+"""Family-aware model API: batch schema, loss, decode entry points.
+
+The PeriodicDecoder implements all families; this module owns the
+per-family *batch schema* (what `input_specs()` must provide) and glue:
+
+  dense/moe/ssm/hybrid : {tokens (B,T), labels (B,T)}
+  audio (whisper)      : {frames (B,Tm,H) stub embeddings, tokens, labels}
+  vlm (llava)          : {img_embeds (B,Ti,H) stub embeddings, tokens, labels}
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+__all__ = ["Model", "build_model"]
+
+
+class Model:
+    """Thin family-aware facade over the PeriodicDecoder."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- init ------------------------------------------------------------
+    def init(self, key) -> dict:
+        return T.init(key, self.cfg)
+
+    # -- training --------------------------------------------------------
+    def loss(self, params, batch, *, moe_backend="gathered", mesh=None,
+             moe_token_axes=("data", "model")):
+        cfg = self.cfg
+        kw = dict(moe_backend=moe_backend, mesh=mesh,
+                  moe_token_axes=moe_token_axes)
+        if cfg.family == "audio":
+            memory = T.encode(params, cfg, batch["frames"].astype(cfg.jdtype))
+            return T.lm_loss(
+                params, cfg, batch["tokens"], batch["labels"],
+                memory=memory, **kw,
+            )
+        if cfg.family == "vlm":
+            return T.lm_loss(
+                params, cfg, batch["tokens"], batch["labels"],
+                extra_embeds=batch["img_embeds"], **kw,
+            )
+        return T.lm_loss(
+            params, cfg, batch["tokens"], batch["labels"], **kw,
+        )
+
+    # -- serving ---------------------------------------------------------
+    def prefill(self, params, batch, *, moe_backend="gathered", mesh=None,
+                moe_token_axes=("data", "model"), max_len: int | None = None):
+        """Full-context forward producing logits + decode caches.
+
+        ``max_len`` pads full-attention caches so decode can append beyond
+        the prompt (window caches are ring-sized already)."""
+        cfg = self.cfg
+        memory = None
+        x = L.embed(params["embed"], batch["tokens"], cfg.jdtype)
+        if cfg.family == "audio":
+            memory = T.encode(params, cfg, batch["frames"].astype(cfg.jdtype))
+        if cfg.family == "vlm":
+            x = jnp.concatenate(
+                [batch["img_embeds"].astype(cfg.jdtype), x], axis=1
+            )
+        logits, caches = T.forward(
+            params, cfg, x, memory=memory, moe_backend=moe_backend,
+            mesh=mesh, return_caches=True, moe_token_axes=moe_token_axes,
+            cache_len=max_len,
+        )
+        return logits, caches, memory
+
+    def init_caches(self, batch: int, max_len: int):
+        return T.init_caches(self.cfg, batch, max_len, self.cfg.jdtype)
+
+    def decode_step(
+        self, params, tokens_t, caches, pos, *,
+        memory=None, moe_backend="gathered", mesh=None,
+        moe_token_axes=("data", "model"),
+    ):
+        """tokens_t: (B, 1) int32 -> (logits (B, V), new caches)."""
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens_t, cfg.jdtype)
+        return T.decode_step(
+            params, cfg, x, caches, pos, memory=memory,
+            moe_backend=moe_backend, mesh=mesh,
+            moe_token_axes=moe_token_axes,
+        )
+
+    # -- misc --------------------------------------------------------------
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

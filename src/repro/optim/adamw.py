@@ -1,0 +1,148 @@
+"""AdamW + schedules + gradient utilities (self-contained, no optax)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "OptConfig", "OptState", "init_opt", "apply_updates",
+    "cosine_schedule", "clip_by_global_norm", "global_norm",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jax.Array
+
+
+def _q_zeros(p):
+    """int8 moment + per-row f32 scale (block-quantized optimizer state —
+    a §Perf memory-term lever; 4 bytes -> ~1.03 bytes per moment)."""
+    rows = p.shape[0] if p.ndim >= 1 else 1
+    return {
+        "q": jnp.zeros(p.shape, jnp.int8),
+        "s": jnp.zeros((rows,) if p.ndim >= 1 else (), jnp.float32),
+    }
+
+
+def _q_load(m):
+    if isinstance(m, dict) and "q" in m:
+        s = m["s"]
+        if s.ndim >= 1 and m["q"].ndim >= 1:
+            s = s.reshape((-1,) + (1,) * (m["q"].ndim - 1))
+        return m["q"].astype(jnp.float32) * s
+    return m
+
+
+def _q_store(val, like):
+    if isinstance(like, dict) and "q" in like:
+        # Scale granularity follows the existing state: per-row when the
+        # stored scale has a leading axis, scalar otherwise (blocked
+        # updates slice the row axis away — see apply_updates).
+        if like["s"].ndim >= 1 and val.ndim >= 1:
+            axes = tuple(range(1, val.ndim))
+            s = jnp.max(jnp.abs(val), axis=axes) / 127.0 + 1e-12
+            q = jnp.clip(jnp.round(
+                val / s.reshape((-1,) + (1,) * (val.ndim - 1))
+            ), -127, 127).astype(jnp.int8)
+        else:
+            s = jnp.max(jnp.abs(val)) / 127.0 + 1e-12
+            q = jnp.clip(jnp.round(val / s), -127, 127).astype(jnp.int8)
+        return {"q": q, "s": s}
+    return val
+
+
+def init_opt(params, *, quantize: bool = False) -> OptState:
+    if quantize:
+        mu = jax.tree.map(_q_zeros, params)
+        nu = jax.tree.map(_q_zeros, params)
+        return OptState(mu=mu, nu=nu, step=jnp.zeros((), jnp.int32))
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    return OptState(mu=zeros, nu=jax.tree.map(jnp.copy, zeros),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def cosine_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / max(1, cfg.total_steps - cfg.warmup_steps),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)
+    ))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def apply_updates(
+    params, grads, state: OptState, cfg: OptConfig
+) -> tuple[Any, OptState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = cosine_schedule(cfg, state.step)
+    b1, b2 = cfg.beta1, cfg.beta2
+
+    def upd(p, g, mu_st, nu_st):
+        g = g.astype(jnp.float32)
+        mu = b1 * _q_load(mu_st) + (1 - b1) * g
+        nu = b2 * _q_load(nu_st) + (1 - b2) * g * g
+        mu_hat = mu / (1 - b1 ** step)
+        nu_hat = nu / (1 - b2 ** step)
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (delta + wd * p.astype(jnp.float32))
+        return newp.astype(p.dtype), _q_store(mu, mu_st), _q_store(nu, nu_st)
+
+    # NOTE(§Perf, refuted): a lax.map-blocked update over big stacked
+    # leaves was tried to bound the dequantized-moment transients; on this
+    # backend's buffer accounting the loop's xs/ys double-buffering cost
+    # *more* than it saved (temp 65.7 -> 78.2 GB on kimi train_4k), so the
+    # straight per-leaf update stays.
+    is_q = lambda x: isinstance(x, dict) and "q" in x
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state.mu, is_leaf=is_q)
+    flat_nu = jax.tree.leaves(state.nu, is_leaf=is_q)
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = tree.unflatten([o[0] for o in out])
+    new_state = OptState(
+        mu=tree.unflatten([o[1] for o in out]),
+        nu=tree.unflatten([o[2] for o in out]),
+        step=step,
+    )
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

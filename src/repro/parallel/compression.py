@@ -1,0 +1,63 @@
+"""Gradient compression for cross-pod (DCN) all-reduce.
+
+``compressed_psum`` performs an int8 quantized all-reduce with per-tensor
+scales; ``ErrorFeedback`` accumulates the quantization residual so the
+compression is unbiased over steps (EF-SGD).  Intended for the ``pod`` axis
+of the production mesh, where the inter-pod link is the beta-dominated term
+(the intra-pod all-reduce stays full precision).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum",
+           "ef_compress_grads"]
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8 all-reduce: quantize -> psum int32 -> dequant with summed scale.
+
+    All ranks share one scale via max-psum so the sum is exact in the
+    quantized domain (no per-rank scale mismatch).
+    """
+    scale = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    return total.astype(jnp.float32) * scale
+
+
+def ef_compress_grads(grads, residual, axis_name: str):
+    """Error-feedback compressed gradient sync over ``axis_name``.
+
+    Returns (synced_grads, new_residual).  Call inside shard_map over the
+    pod axis; pass residual zeros_like(grads) at step 0.
+    """
+
+    def one(g, r):
+        g = g + r
+        synced = compressed_psum(g, axis_name) / jax.lax.axis_size(axis_name)
+        # residual = what this rank contributed minus what quantization kept
+        scale = jax.lax.pmax(jnp.max(jnp.abs(g)), axis_name) / 127.0 + 1e-12
+        kept = jnp.clip(jnp.round(g / scale), -127, 127) * scale
+        return synced, g - kept
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    synced = tree.unflatten([o[0] for o in out])
+    new_res = tree.unflatten([o[1] for o in out])
+    return synced, new_res

@@ -1,0 +1,229 @@
+"""Partition-spec derivation for every parameter / activation in the zoo.
+
+Axis convention (DESIGN.md §4):
+
+  ``data``  (x ``pod``)  — batch / FSDP axis
+  ``model``              — TP (heads, ffn, vocab) and EP (experts) axis
+
+Rules are path-based over the parameter pytree, so they apply uniformly to
+stacked period slots (leading ``n_periods`` dim is skipped automatically).
+Explicit input shardings must divide exactly, so every rule is
+divisibility-guarded with documented fallbacks:
+
+  * KV-cache heads: kv-heads -> head_dim -> replicate (GQA kv counts like 4
+    or 6 don't divide a 16-way model axis; the 128-wide head_dim does);
+  * embeddings: vocab -> hidden -> replicate (mamba2's 50280 and whisper's
+    51865 vocabs aren't multiples of 16);
+  * batch: data axis when divisible, else sequence (SP) for long-context
+    decode, else replicate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+__all__ = [
+    "MeshAxes", "param_specs", "batch_specs", "cache_specs",
+    "shardings_for", "count_bytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    data: tuple[str, ...] = ("data",)   # ("pod","data") for multi-pod DP
+    model: str = "model"
+    data_size: int = 16                 # product over the data axes
+    model_size: int = 16
+
+    @property
+    def dp(self):
+        return self.data if len(self.data) > 1 else self.data[0]
+
+
+def _pick(dim: int, size: int, axis):
+    """Return ``axis`` if ``dim`` divides evenly over it, else None."""
+    return axis if dim % size == 0 and dim >= size else None
+
+
+def _spec_for_leaf(path: str, leaf, cfg: ArchConfig, ax: MeshAxes,
+                   fsdp: bool) -> P:
+    """Sharding rule table, keyed by parameter name within its block."""
+    m, msz = ax.model, ax.model_size
+    d, dsz = ax.dp, ax.data_size
+    ndim = leaf.ndim
+    shape = leaf.shape
+    stacked = "slots" in path  # leading n_periods axis from the period scan
+    off = 1 if stacked else 0
+    lead: tuple = (None,) if stacked else ()
+
+    def spec(*dims):
+        out = lead + dims
+        out = out + (None,) * (ndim - len(out))
+        return P(*out[:ndim])
+
+    def dim(i):
+        return shape[off + i] if off + i < len(shape) else 1
+
+    parts = path.split("/")
+    name = parts[-1]
+    parent = parts[-2] if len(parts) > 1 else ""
+    # quantized optimizer moments: shard int8 payload like its parameter;
+    # per-row scales are small and stay replicated.
+    if name == "q":
+        name, parent = parent, (parts[-3] if len(parts) > 2 else "")
+    elif name == "s" and parent not in ("mixer", "ffn"):
+        return spec()
+
+    # --- embeddings: vocab over model, fallback hidden ------------------
+    if name == "tok":
+        if shape[0] % msz == 0:
+            return P(m, None)
+        if shape[1] % msz == 0:
+            return P(None, m)
+        return P(None, None)
+    if name == "head" and parent == "embed":
+        return P(None, _pick(shape[1], msz, m))
+
+    # --- MoE experts: EP over model; optional FSDP over data ------------
+    if parent == "ffn" and name in ("w1", "w3", "w2") and ndim - off == 3:
+        e_ax = _pick(dim(0), msz, m)
+        f_ax = _pick(dim(1), dsz, d) if fsdp else None
+        return spec(e_ax, f_ax, None)
+    if name == "w_gate":
+        return spec(None, None)
+
+    # --- projections: output-dim TP in, input-dim TP out ----------------
+    if name in ("wq", "wk", "wv", "wi", "wr", "in_x", "in_z", "w1", "w3"):
+        return spec(
+            _pick(dim(0), dsz, d) if fsdp else None,
+            _pick(dim(1), msz, m),
+        )
+    if name in ("wo", "out", "w2"):
+        return spec(
+            _pick(dim(0), msz, m),
+            _pick(dim(1), dsz, d) if fsdp else None,
+        )
+
+    # --- small vectors / norms / conv: replicated ------------------------
+    return spec()
+
+
+def param_specs(params, cfg: ArchConfig, ax: MeshAxes | None = None,
+                *, fsdp: bool = False):
+    """PartitionSpec pytree matching ``params``."""
+    ax = ax or MeshAxes()
+
+    def walk(path_parts, leaf):
+        path = "/".join(str(p) for p in path_parts)
+        return _spec_for_leaf(path, leaf, cfg, ax, fsdp)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: walk([_key_str(k) for k in kp], x), params
+    )
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, ax: MeshAxes | None = None):
+    """Specs for the input batch dict (tokens/labels/frames/img_embeds)."""
+    ax = ax or MeshAxes()
+    d, dsz = ax.dp, ax.data_size
+    b_ax = d if shape.global_batch % dsz == 0 else None
+    specs: dict[str, P] = {}
+    if shape.kind in ("train", "prefill"):
+        specs["tokens"] = P(b_ax, None)
+        specs["labels"] = P(b_ax, None)
+        if cfg.family == "audio":
+            specs["frames"] = P(b_ax, None, None)
+        if cfg.family == "vlm":
+            specs["img_embeds"] = P(b_ax, None, None)
+    else:  # decode
+        specs["tokens"] = P(b_ax, None)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec, caches,
+                ax: MeshAxes | None = None):
+    """Decode-cache specs.
+
+    Batch over data when divisible; otherwise (long-context, batch=1) the
+    *sequence* axis is sharded over data (SP) — GSPMD inserts the
+    softmax-stable reductions.  Head-like axes go over model with the
+    kv-heads -> head_dim -> replicate fallback.
+    """
+    ax = ax or MeshAxes()
+    d, dsz = ax.dp, ax.data_size
+    m, msz = ax.model, ax.model_size
+    batch_ax = d if shape.global_batch % dsz == 0 else None
+
+    def leaf_spec(path_parts, leaf):
+        path = "/".join(_key_str(k) for k in path_parts)
+        stacked = "slots" in path
+        off = 1 if stacked else 0
+        lead: tuple = (None,) if stacked else ()
+        name = path.split("/")[-1]
+        nd = leaf.ndim
+        shape_ = leaf.shape
+
+        def dim(i):
+            return shape_[off + i] if off + i < len(shape_) else 1
+
+        def spec(*dims):
+            out = lead + dims
+            out = out + (None,) * (nd - len(out))
+            return P(*out[:nd])
+
+        if name in ("k", "v"):
+            # (B, S, nkv, hd).  Preferred: kv heads over model.  When the
+            # head count doesn't divide, shard the *sequence* over model
+            # (flash-decode layout: per-shard partial attention + psum of
+            # the softmax stats) — sharding head_dim instead provokes
+            # GSPMD's involuntary full rematerialization (replicates the
+            # whole cache per layer).
+            h_ax = _pick(dim(2), msz, m)
+            if h_ax:
+                s_ax = None if batch_ax else _pick(dim(1), dsz, d)
+                return spec(batch_ax, s_ax, h_ax, None)
+            s_ax = _pick(dim(1), msz, m)
+            return spec(batch_ax, s_ax, None, None)
+        if name == "s":       # SSD state (B, nh, N, dh)
+            h_ax = _pick(dim(1), msz, m)
+            n_ax = None if h_ax else _pick(dim(2), msz, m)
+            return spec(batch_ax, h_ax, n_ax, None)
+        if name == "h":       # RG-LRU state (B, H)
+            return spec(batch_ax, _pick(dim(1), msz, m))
+        if name == "conv":    # (B, K-1, C)
+            return spec(batch_ax, None, _pick(dim(2), msz, m))
+        return spec()
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: leaf_spec(kp, x), caches
+    )
+
+
+def shardings_for(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def count_bytes(tree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree.leaves(tree)
+    )

@@ -1,0 +1,76 @@
+"""Elastic scaling: resume a run on a different device count / mesh shape.
+
+Checkpoints store *global* (mesh-independent) arrays, so rescaling is a
+restore with new shardings plus a data-cursor adjustment:
+
+  * scale-down (lost nodes): restore onto the smaller mesh (each device
+    holds a larger shard), keep the global batch by raising grad-accum;
+  * scale-up: restore onto the larger mesh, lower grad-accum.
+
+``plan_rescale`` computes the new (mesh, grad_accum, shardings) tuple;
+``rescale_state`` materializes the restored state.  On a 1000+-node
+deployment the same logic runs per-host against the sharded checkpoint
+format (each host reads only its shard ranges — the manifest carries
+global shapes, so the mapping is deterministic).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["RescalePlan", "plan_rescale", "rescale_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RescalePlan:
+    old_data_parallel: int
+    new_data_parallel: int
+    grad_accum_multiplier: int     # keep the global batch constant
+    mesh_axes: tuple[str, ...]
+
+    @property
+    def keeps_global_batch(self) -> bool:
+        return (self.old_data_parallel % self.new_data_parallel == 0
+                or self.new_data_parallel % self.old_data_parallel == 0)
+
+
+def plan_rescale(old_dp: int, new_dp: int,
+                 axes: tuple[str, ...] = ("data", "model")) -> RescalePlan:
+    """Keep global batch fixed: grad-accum absorbs the DP-degree change."""
+    if new_dp <= 0:
+        raise ValueError("new data-parallel degree must be positive")
+    mult = max(1, old_dp // new_dp)
+    return RescalePlan(
+        old_data_parallel=old_dp,
+        new_data_parallel=new_dp,
+        grad_accum_multiplier=mult,
+        mesh_axes=axes,
+    )
+
+
+def rescale_state(
+    ckpt: CheckpointManager,
+    target_tree: Any,
+    new_mesh: Mesh,
+    specs: Any,
+    *,
+    step: int | None = None,
+) -> tuple[Any, dict]:
+    """Restore a checkpoint resharded for ``new_mesh``.
+
+    ``specs`` is the PartitionSpec pytree for ``target_tree`` (same rules as
+    training — e.g. ``parallel.sharding.param_specs``); arrays land directly
+    with the new sharding, no host-side reassembly beyond the npz read.
+    """
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(new_mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return ckpt.restore(target_tree, step=step, shardings=shardings)

@@ -1,0 +1,221 @@
+"""Fault-tolerant training loop.
+
+Production-shape concerns handled here (DESIGN.md §9):
+
+  * checkpoint/restart — periodic async snapshots (params + opt state +
+    data cursor); on *any* step failure the loop restores the latest
+    snapshot and replays from there (at-least-once step semantics, data
+    pipeline is counter-based so replays are deterministic);
+  * straggler detection — per-step wall-time EWMA + z-score flagging with a
+    pluggable response hook (the paper's fence-drain tail is exactly this
+    failure mode at the transport layer);
+  * fault injection — tests drive recovery through ``fault_hook``;
+  * gradient accumulation — microbatched scan so XLA overlaps the DP
+    all-reduce of microbatch i with compute of i+1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.optim.adamw import OptConfig, OptState, apply_updates, init_opt
+
+__all__ = ["TrainConfig", "StragglerMonitor", "Trainer", "make_train_step"]
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    grad_accum: int = 1
+    log_every: int = 10
+    max_restarts: int = 3
+
+
+class StragglerMonitor:
+    """EWMA + z-score step-time monitor (per-host in multi-host settings)."""
+
+    def __init__(self, alpha: float = 0.1, z_threshold: float = 4.0,
+                 warmup: int = 5):
+        self.alpha = alpha
+        self.z = z_threshold
+        self.warmup = warmup
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+        self.flagged: list[tuple[int, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.n += 1
+        if self.n <= self.warmup:
+            # prime the EWMA
+            self.mean = dt if self.n == 1 else (
+                self.mean + (dt - self.mean) / self.n
+            )
+            self.var = max(self.var, (dt - self.mean) ** 2)
+            return False
+        std = max(1e-9, self.var ** 0.5)
+        is_straggler = (dt - self.mean) / std > self.z and dt > 1.5 * self.mean
+        d = dt - self.mean
+        self.mean += self.alpha * d
+        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        if is_straggler:
+            self.flagged.append((step, dt))
+        return is_straggler
+
+
+def make_train_step(
+    loss_fn: Callable,          # (params, batch) -> scalar loss
+    opt_cfg: OptConfig,
+    *,
+    grad_accum: int = 1,
+    donate: bool = True,
+    jit: bool = True,
+):
+    """Build the (jitted) train step: loss -> grads -> clip -> AdamW."""
+
+    def step(params, opt_state: OptState, batch):
+        if grad_accum > 1:
+            # split batch on axis 0 into microbatches and scan-accumulate;
+            # XLA overlaps each microbatch's grad all-reduce with the next
+            # microbatch's compute.
+            def micro(carry, mb):
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                acc_loss, acc_g = carry
+                return (
+                    acc_loss + loss,
+                    jax.tree.map(jnp.add, acc_g, grads),
+                ), None
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape(
+                    (grad_accum, x.shape[0] // grad_accum) + x.shape[1:]
+                ),
+                batch,
+            )
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zero), micro_batches
+            )
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, metrics = apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    if not jit:
+        return step
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+class Trainer:
+    """Drives the loop with checkpoint/restart + straggler monitoring."""
+
+    def __init__(
+        self,
+        train_step: Callable,
+        dataset,                      # SyntheticDataset-like: .batch(i)
+        params,
+        cfg: TrainConfig,
+        *,
+        fault_hook: Callable[[int], None] | None = None,
+        log: Callable[[str], None] = print,
+    ):
+        self.train_step = train_step
+        self.dataset = dataset
+        self.cfg = cfg
+        self.params = params
+        self.opt_state = init_opt(params)
+        self.step_idx = 0
+        self.monitor = StragglerMonitor()
+        self.ckpt = CheckpointManager(
+            cfg.ckpt_dir, keep=cfg.keep, async_save=True
+        )
+        self.fault_hook = fault_hook
+        self.log = log
+        self.restarts = 0
+        self.history: list[dict] = []
+
+    # -- persistence ----------------------------------------------------
+    def _state_tree(self):
+        return {
+            "params": self.params,
+            "opt": self.opt_state._asdict(),
+        }
+
+    def save(self):
+        self.ckpt.save(
+            self.step_idx, self._state_tree(),
+            metadata={"step_idx": self.step_idx},
+        )
+
+    def restore(self):
+        tree, meta = self.ckpt.restore(self._state_tree())
+        self.params = tree["params"]
+        self.opt_state = OptState(**tree["opt"])
+        self.step_idx = int(meta["step_idx"])
+        self.log(f"[trainer] restored checkpoint at step {self.step_idx}")
+
+    # -- main loop --------------------------------------------------------
+    def run(self) -> list[dict]:
+        while self.step_idx < self.cfg.steps:
+            try:
+                self._run_segment()
+            except Exception as e:  # device loss / injected fault / NaN
+                self.restarts += 1
+                self.log(
+                    f"[trainer] step {self.step_idx} failed ({e!r}); "
+                    f"restart {self.restarts}/{self.cfg.max_restarts}"
+                )
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                if self.ckpt.latest_step() is None:
+                    self.log("[trainer] no checkpoint yet; reinit from step 0")
+                    self.step_idx = 0
+                else:
+                    self.restore()
+        self.ckpt.wait()
+        return self.history
+
+    def _run_segment(self):
+        while self.step_idx < self.cfg.steps:
+            i = self.step_idx
+            if self.fault_hook is not None:
+                self.fault_hook(i)
+            batch = self.dataset.batch(i)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch
+            )
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if not jnp.isfinite(loss):
+                raise FloatingPointError(f"non-finite loss at step {i}")
+            if self.monitor.observe(i, dt):
+                self.log(
+                    f"[trainer] straggler: step {i} took {dt*1e3:.1f}ms "
+                    f"(ewma {self.monitor.mean*1e3:.1f}ms)"
+                )
+            self.history.append(
+                {"step": i, "loss": loss, "time_s": dt,
+                 "grad_norm": float(metrics["grad_norm"])}
+            )
+            if self.cfg.log_every and i % self.cfg.log_every == 0:
+                self.log(f"[trainer] step {i} loss {loss:.4f} ({dt*1e3:.0f}ms)")
+            self.step_idx = i + 1
+            if self.cfg.ckpt_every and self.step_idx % self.cfg.ckpt_every == 0:
+                self.save()

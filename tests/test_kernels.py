@@ -1,0 +1,146 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels import ops, ref
+
+RNG = np.random.RandomState(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# expert_gemm
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("E,T,H,F", [
+    (1, 16, 8, 8),
+    (3, 64, 32, 48),
+    (4, 100, 24, 56),       # non-multiple-of-block sizes
+    (2, 128, 128, 128),     # MXU-aligned
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_expert_ffn_sweep(E, T, H, F, dtype):
+    x = jnp.asarray(RNG.randn(E, T, H), dtype) * 0.3
+    w1 = jnp.asarray(RNG.randn(E, H, F), dtype) * 0.2
+    w3 = jnp.asarray(RNG.randn(E, H, F), dtype) * 0.2
+    w2 = jnp.asarray(RNG.randn(E, F, H), dtype) * 0.2
+    got = ops.expert_ffn(x, w1, w3, w2, block_t=32, block_f=16)
+    exp = ref.expert_ffn_ref(x, w1, w3, w2)
+    assert_allclose(np.asarray(got, np.float32), np.asarray(exp, np.float32),
+                    **_tol(dtype))
+
+
+@pytest.mark.parametrize("activation", ["silu", "gelu"])
+def test_expert_ffn_activations(activation):
+    E, T, H, F = 2, 32, 16, 24
+    x = jnp.asarray(RNG.randn(E, T, H), jnp.float32) * 0.3
+    w1 = jnp.asarray(RNG.randn(E, H, F), jnp.float32) * 0.2
+    w3 = jnp.asarray(RNG.randn(E, H, F), jnp.float32) * 0.2
+    w2 = jnp.asarray(RNG.randn(E, F, H), jnp.float32) * 0.2
+    got = ops.expert_ffn(x, w1, w3, w2, activation=activation, block_t=16,
+                         block_f=8)
+    exp = ref.expert_ffn_ref(x, w1, w3, w2, activation=activation)
+    assert_allclose(np.asarray(got), np.asarray(exp), rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# flash_attention
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,T,D", [
+    (1, 1, 1, 32, 8),
+    (2, 4, 2, 64, 16),       # GQA 2:1
+    (1, 8, 1, 128, 32),      # MQA
+    (2, 6, 3, 96, 16),       # non-power-of-two heads
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Hq, Hkv, T, D, causal, dtype):
+    q = jnp.asarray(RNG.randn(B, Hq, T, D), dtype) * 0.5
+    k = jnp.asarray(RNG.randn(B, Hkv, T, D), dtype) * 0.5
+    v = jnp.asarray(RNG.randn(B, Hkv, T, D), dtype) * 0.5
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    exp = ref.attention_ref(q, k, v, causal=causal)
+    assert_allclose(np.asarray(got, np.float32), np.asarray(exp, np.float32),
+                    **_tol(dtype))
+
+
+def test_flash_attention_block_shape_independence():
+    B, Hq, Hkv, T, D = 1, 2, 1, 128, 16
+    q = jnp.asarray(RNG.randn(B, Hq, T, D), jnp.float32) * 0.5
+    k = jnp.asarray(RNG.randn(B, Hkv, T, D), jnp.float32) * 0.5
+    v = jnp.asarray(RNG.randn(B, Hkv, T, D), jnp.float32) * 0.5
+    outs = [
+        np.asarray(ops.flash_attention(q, k, v, block_q=bq, block_k=bk))
+        for bq, bk in [(16, 16), (32, 64), (128, 128), (64, 16)]
+    ]
+    for o in outs[1:]:
+        assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# ssd_scan
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,L,H,Dh,N,chunk", [
+    (1, 16, 1, 4, 2, 8),
+    (2, 64, 3, 8, 4, 16),
+    (1, 128, 2, 16, 8, 32),
+    (2, 96, 4, 8, 4, 32),    # L not a multiple of 2*chunk
+])
+def test_ssd_scan_sweep(B, L, H, Dh, N, chunk):
+    x = jnp.asarray(RNG.randn(B, L, H, Dh), jnp.float32) * 0.5
+    dt = jnp.asarray(np.abs(RNG.randn(B, L, H)) * 0.1 + 0.01, jnp.float32)
+    a = jnp.asarray(-np.abs(RNG.randn(H)) - 0.1, jnp.float32)
+    bm = jnp.asarray(RNG.randn(B, L, H, N), jnp.float32) * 0.3
+    cm = jnp.asarray(RNG.randn(B, L, H, N), jnp.float32) * 0.3
+    got = ops.ssd_scan(x, dt, a, bm, cm, chunk=chunk)
+    exp = ref.ssd_scan_ref(x, dt, a, bm, cm)
+    assert_allclose(np.asarray(got), np.asarray(exp), rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_scan_strong_decay_stable():
+    """Strong decay regime must not produce inf/nan (masked-exp bug guard)."""
+    B, L, H, Dh, N = 1, 64, 2, 8, 4
+    x = jnp.asarray(RNG.randn(B, L, H, Dh), jnp.float32)
+    dt = jnp.full((B, L, H), 2.0, jnp.float32)      # large steps
+    a = jnp.asarray([-8.0, -16.0], jnp.float32)     # strong decay
+    bm = jnp.asarray(RNG.randn(B, L, H, N), jnp.float32)
+    cm = jnp.asarray(RNG.randn(B, L, H, N), jnp.float32)
+    got = ops.ssd_scan(x, dt, a, bm, cm, chunk=16)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    exp = ref.ssd_scan_ref(x, dt, a, bm, cm)
+    assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# models' jnp SSD path == kernel == naive recurrence
+# --------------------------------------------------------------------------
+
+
+def test_models_ssd_chunked_matches_kernel():
+    from repro.configs.base import ArchConfig, LayerSpec
+    from repro.models import layers as L
+
+    cfg = ArchConfig(
+        name="t", family="ssm", n_layers=1, d_model=32, n_heads=2,
+        n_kv_heads=2, d_ff=0, vocab=64, ssm_state=8, ssm_head_dim=16,
+        pattern=(LayerSpec(mixer="ssd", ffn="none"),), dtype="float32",
+    )
+    key = jax.random.PRNGKey(0)
+    p = L.init_ssd(key, cfg)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32)) * 0.3
+    full = L.ssd_fwd(p, cfg, u, chunk=16)
+    full2 = L.ssd_fwd(p, cfg, u, chunk=64)
+    assert_allclose(np.asarray(full), np.asarray(full2), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,191 @@
+"""Runtime: checkpoint manager, fault-tolerant trainer, straggler monitor,
+serving loop, optimizer, data determinism."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import LM_SHAPES, reduce_for_smoke
+from repro.configs.registry import get_config
+from repro.data.synthetic import SyntheticDataset
+from repro.models.registry import build_model
+from repro.optim.adamw import (
+    OptConfig, apply_updates, cosine_schedule, init_opt,
+)
+from repro.runtime.serve_loop import Request, ServeConfig, Server
+from repro.runtime.train_loop import (
+    StragglerMonitor, TrainConfig, Trainer, make_train_step,
+)
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    state = init_opt(params)
+    cfg = OptConfig(lr=0.2, weight_decay=0.0, warmup_steps=1, total_steps=200)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = apply_updates(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_clip_and_schedule():
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(cosine_schedule(cfg, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9]                       # warmup rises
+    assert lrs[20] > lrs[90]                     # cosine decays
+    assert min(lrs) >= cfg.lr * cfg.min_lr_ratio * 0.5
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_restartable():
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    shape = LM_SHAPES["train_4k"]
+    ds1 = SyntheticDataset(cfg, shape, seed=7, batch_override=4,
+                           seq_override=32)
+    ds2 = SyntheticDataset(cfg, shape, seed=7, batch_override=4,
+                           seq_override=32)
+    b5a = ds1.batch(5)
+    # simulate a restart: fresh object, same counter
+    b5b = ds2.batch(5)
+    assert np.array_equal(np.asarray(b5a["tokens"]), np.asarray(b5b["tokens"]))
+    assert not np.array_equal(
+        np.asarray(ds1.batch(6)["tokens"]), np.asarray(b5a["tokens"])
+    )
+    # labels are the shifted stream (next-token)
+    assert np.array_equal(
+        np.asarray(b5a["labels"])[:, :-1], np.asarray(b5a["tokens"])[:, 1:]
+    )
+
+
+# --------------------------------------------------------------------------
+# checkpoint manager
+# --------------------------------------------------------------------------
+
+
+def _tree(x=1.0):
+    return {"a": jnp.full((4, 3), x), "b": {"c": jnp.arange(5)}}
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for step in (10, 20, 30):
+        mgr.save(step, _tree(step))
+    assert mgr.all_steps() == [20, 30]           # keep-2 GC
+    assert mgr.latest_step() == 30
+    restored, meta = mgr.restore(_tree())
+    assert_allclose(np.asarray(restored["a"]), 30.0)
+
+
+def test_checkpoint_atomicity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    mgr.save(1, _tree(1.0))
+    # a crashed partial write must be ignored
+    os.makedirs(tmp_path / "step_000000002.tmp")
+    assert mgr.latest_step() == 1
+    restored, _ = mgr.restore(_tree())
+    assert_allclose(np.asarray(restored["a"]), 1.0)
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(5, _tree(5.0))
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _tree())
+    bad = {"a": jnp.zeros((2, 2)), "b": {"c": jnp.arange(5)}}
+    with pytest.raises(ValueError):
+        mgr.restore(bad)
+
+
+# --------------------------------------------------------------------------
+# trainer: loss goes down, faults recover, stragglers flagged
+# --------------------------------------------------------------------------
+
+
+def _tiny_setup(tmp_path, steps=40, ckpt_every=10):
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shape = LM_SHAPES["train_4k"]
+    ds = SyntheticDataset(cfg, shape, seed=0, batch_override=8,
+                          seq_override=32)
+    step = make_train_step(
+        model.loss, OptConfig(lr=3e-3, warmup_steps=4, total_steps=steps)
+    )
+    tc = TrainConfig(steps=steps, ckpt_every=ckpt_every,
+                     ckpt_dir=str(tmp_path), log_every=0)
+    return step, ds, params, tc
+
+
+def test_training_loss_decreases(tmp_path):
+    step, ds, params, tc = _tiny_setup(tmp_path)
+    trainer = Trainer(step, ds, params, tc, log=lambda *_: None)
+    hist = trainer.run()
+    first = np.mean([h["loss"] for h in hist[:4]])
+    last = np.mean([h["loss"] for h in hist[-4:]])
+    assert last < first - 0.05, f"no learning: {first:.3f} -> {last:.3f}"
+
+
+def test_fault_recovery_resumes_from_checkpoint(tmp_path):
+    step, ds, params, tc = _tiny_setup(tmp_path, steps=20, ckpt_every=5)
+    crashed = {"done": False}
+
+    def fault(i):
+        if i == 12 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("injected device loss")
+
+    trainer = Trainer(step, ds, params, tc, fault_hook=fault,
+                      log=lambda *_: None)
+    hist = trainer.run()
+    steps_seen = [h["step"] for h in hist]
+    # step 12 failed once, was replayed after restore from step 10
+    assert steps_seen.count(10) == 2 or steps_seen.count(11) == 2
+    assert trainer.restarts == 1
+    assert trainer.step_idx == 20
+
+
+def test_straggler_monitor_flags_outlier():
+    mon = StragglerMonitor(warmup=3, z_threshold=3.0)
+    flagged = [mon.observe(i, 0.10 + 0.001 * (i % 3)) for i in range(20)]
+    assert not any(flagged)
+    assert mon.observe(20, 0.9)       # 9x normal step time
+    assert mon.flagged and mon.flagged[0][0] == 20
+
+
+# --------------------------------------------------------------------------
+# serving loop
+# --------------------------------------------------------------------------
+
+
+def test_server_continuous_batching():
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    srv = Server(model, params, ServeConfig(slots=2, max_len=64))
+    for rid in range(5):   # more requests than slots
+        srv.submit(Request(rid=rid, prompt=[1 + rid, 2, 3],
+                           max_new_tokens=4))
+    done = srv.run_until_drained()
+    assert len(done) == 5
+    for req in done:
+        assert len(req.out) >= 4
+        assert all(0 <= t < cfg.vocab for t in req.out)

@@ -1,0 +1,106 @@
+"""Sharding rules: every derived spec must divide its array exactly
+(explicit input shardings reject padding), for every arch on both meshes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LM_SHAPES
+from repro.configs.registry import ASSIGNED, get_config
+from repro.models import transformer as T
+from repro.optim.adamw import init_opt
+from repro.parallel import sharding as shd
+
+
+MESHES = {
+    "single": ({"data": 16, "model": 16}, ("data",)),
+    "multi": ({"pod": 2, "data": 16, "model": 16}, ("pod", "data")),
+}
+
+
+def _axes(mesh_kind):
+    sizes, data_axes = MESHES[mesh_kind]
+    dsz = 1
+    for a in data_axes:
+        dsz *= sizes[a]
+    return shd.MeshAxes(data=data_axes, data_size=dsz,
+                        model_size=sizes["model"]), sizes
+
+
+def _check_divisible(specs, tree, sizes, what):
+    flat_s = jax.tree.leaves(
+        specs, is_leaf=lambda x: hasattr(x, "index_sharding") or
+        x.__class__.__name__ == "PartitionSpec")
+    flat_t = jax.tree.leaves(tree)
+    assert len(flat_s) == len(flat_t)
+    for spec, leaf in zip(flat_s, flat_t):
+        for dim, part in zip(leaf.shape, tuple(spec)):
+            if part is None:
+                continue
+            parts = part if isinstance(part, tuple) else (part,)
+            size = 1
+            for p in parts:
+                size *= sizes[p]
+            assert dim % size == 0, (
+                f"{what}: dim {dim} not divisible by {part}={size} "
+                f"(leaf shape {leaf.shape}, spec {spec})"
+            )
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+@pytest.mark.parametrize("mesh_kind", ["single", "multi"])
+def test_param_specs_divide(arch, mesh_kind):
+    cfg = get_config(arch)
+    axes, sizes = _axes(mesh_kind)
+    params = jax.eval_shape(
+        lambda k: T.init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    specs = shd.param_specs(params, cfg, axes, fsdp=cfg.is_moe)
+    _check_divisible(specs, params, sizes, f"{arch} params")
+    opt = jax.eval_shape(init_opt, params)
+    specs_mu = shd.param_specs(opt.mu, cfg, axes, fsdp=cfg.is_moe)
+    _check_divisible(specs_mu, opt.mu, sizes, f"{arch} opt.mu")
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+@pytest.mark.parametrize("shape_name", list(LM_SHAPES))
+@pytest.mark.parametrize("mesh_kind", ["single", "multi"])
+def test_cache_and_batch_specs_divide(arch, shape_name, mesh_kind):
+    from repro.configs.registry import cell_supported
+    from repro.data.synthetic import make_batch_struct
+
+    cfg = get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    if not cell_supported(cfg, shape)[0]:
+        pytest.skip("cell skipped by assignment")
+    axes, sizes = _axes(mesh_kind)
+    batch = make_batch_struct(cfg, shape)
+    bspecs = shd.batch_specs(cfg, shape, axes)
+    _check_divisible(
+        {k: bspecs[k] for k in batch}, batch, sizes,
+        f"{arch}/{shape_name} batch",
+    )
+    if shape.kind == "decode":
+        caches = jax.eval_shape(
+            lambda: T.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                  cfg.jdtype)
+        )
+        cspecs = shd.cache_specs(cfg, shape, caches, axes)
+        _check_divisible(cspecs, caches, sizes, f"{arch}/{shape_name} cache")
+
+
+def test_moe_experts_divide_model_axis():
+    """EP requires exact divisibility (shard_map): every MoE arch must
+    place an integer number of experts per model rank."""
+    for arch in ("dbrx-132b", "kimi-k2-1t-a32b"):
+        cfg = get_config(arch)
+        assert cfg.n_experts % 16 == 0
+
+
+def test_embedding_fallback_rules():
+    """Indivisible vocabs fall back to hidden-dim sharding (never padded)."""
+    for arch, div in (("mamba2-780m", False), ("whisper-tiny", False),
+                      ("tinyllama-1.1b", True)):
+        cfg = get_config(arch)
+        assert (cfg.vocab % 16 == 0) == div
