@@ -4,26 +4,36 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract): ``us_per_call``
 carries each benchmark's primary value, ``derived`` carries the paper's
 reference number (empty when the paper has no anchor) plus the unit.
 
+``--json BENCH_<name>.json`` additionally writes the rows as a
+machine-readable perf artifact (the repo's perf trajectory), always
+including the staged-vs-fused A/B rows (``fusedAB``) so later PRs can
+track overlap regressions.
+
 Usage::
 
     PYTHONPATH=src python -m benchmarks.run              # everything
     PYTHONPATH=src python -m benchmarks.run --only fig9  # one figure
     PYTHONPATH=src python -m benchmarks.run --roofline   # dry-run report
+    PYTHONPATH=src python -m benchmarks.run --only fusedAB \
+        --json BENCH_fused_ab.json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated figure keys (fig1..appendixA)")
+                    help="comma-separated figure keys (fig1..fusedAB)")
     ap.add_argument("--roofline", action="store_true",
                     help="print the dry-run roofline table and exit")
     ap.add_argument("--skip-wallclock", action="store_true")
+    ap.add_argument("--json", default=None, metavar="BENCH_<name>.json",
+                    help="also write rows as a JSON perf artifact")
     args = ap.parse_args(argv)
 
     from benchmarks import figures, kernel_bench, roofline_report
@@ -45,6 +55,16 @@ def main(argv=None) -> None:
             rows.extend(roofline_report.csv_rows())
         except Exception as e:  # dry-run artifacts may not exist yet
             print(f"# roofline skipped: {e!r}", file=sys.stderr)
+
+    if args.json:
+        # The A/B rows are the artifact's reason to exist: make sure they
+        # are present even when --only selected a different figure subset.
+        if not any(r["name"].startswith("fusedAB/") for r in rows):
+            rows.extend(figures.ALL_FIGURES["fusedAB"]())
+        with open(args.json, "w") as f:
+            json.dump({"schema": "bench-rows/v1", "rows": rows}, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {args.json} ({len(rows)} rows)", file=sys.stderr)
 
     print("name,us_per_call,derived")
     for r in rows:

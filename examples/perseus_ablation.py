@@ -14,7 +14,8 @@ from repro.core.signaling import (
     ScheduleKind, build_schedule, moe_dispatch_transfers, optimal_group_size,
 )
 from repro.core.transport_sim import (
-    LIBFABRIC, QWEN3_30B, simulate_forward, simulate_proxy,
+    LIBFABRIC, QWEN3_30B, simulate_forward, simulate_moe_layer,
+    simulate_proxy,
 )
 
 
@@ -62,6 +63,24 @@ t_fast = simulate_proxy(build_schedule(fast_first, "perseus"),
 print(f"\nbeyond-paper: group ordering — slowest-dest-first "
       f"{t_slow/1e3:.3f} ms vs fastest-first {t_fast/1e3:.3f} ms "
       f"({t_fast/t_slow:.3f}x)")
+
+# ---- beyond-paper: staged vs fused megakernel ----------------------------
+# Even with the best signaling schedule, the *staged* kernel layout
+# (dispatch -> barrier -> expert FFN -> barrier -> combine) leaves
+# serialization on the table; fusing compute into the dispatch kernel
+# (backend="fused") starts each tile's GEMMs on its own recv signal.
+print("\nbeyond-paper: staged vs fused megakernel (perseus schedule):")
+for s in (16, 256, 1024):
+    stg = simulate_moe_layer(QWEN3_30B, tokens_per_pe=s, n_nodes=8,
+                             pe_per_node=4, transport=LIBFABRIC,
+                             schedule="perseus", fused=False)
+    fus = simulate_moe_layer(QWEN3_30B, tokens_per_pe=s, n_nodes=8,
+                             pe_per_node=4, transport=LIBFABRIC,
+                             schedule="perseus", fused=True)
+    print(f"  S={s:5d}: {stg.latency_us/1e3:6.2f} -> "
+          f"{fus.latency_us/1e3:6.2f} ms "
+          f"({stg.latency_us/fus.latency_us:.2f}x), util "
+          f"{stg.utilization:.2f} -> {fus.utilization:.2f}")
 
 # ---- beyond-paper: coalesced signal words --------------------------------
 # One 8B signal per destination carrying a bitfield of expert flags:

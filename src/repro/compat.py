@@ -1,0 +1,87 @@
+"""JAX version-compatibility shims.
+
+The codebase targets the current JAX API (``jax.shard_map``, ``jax.set_mesh``,
+``lax.axis_size``, ``pltpu.CompilerParams``, ``pltpu.InterpretParams``); the
+deployment image may carry an older release (0.4.x) where those spell
+differently.  Every call site that straddles the divide goes through this
+module so the version logic lives in exactly one place.
+
+Covered:
+  * ``shard_map``      — ``jax.shard_map(check_vma=...)`` vs
+                         ``jax.experimental.shard_map.shard_map(check_rep=...)``
+  * ``axis_size``      — ``lax.axis_size`` vs constant-folded ``psum(1, name)``
+                         (both are *static* Python ints under shard_map tracing,
+                         which the Pallas kernels rely on for loop bounds)
+  * ``use_mesh``       — ``jax.set_mesh`` vs the ``Mesh`` context manager
+  * ``tpu_compiler_params`` — ``pltpu.CompilerParams`` vs
+                         ``pltpu.TPUCompilerParams`` (which has no
+                         ``has_side_effects``; outputs keep DMA kernels alive)
+  * ``pallas_interpret``    — ``pltpu.InterpretParams()`` vs legacy ``True``
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax import lax
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "shard_map",
+    "axis_size",
+    "use_mesh",
+    "tpu_compiler_params",
+    "pallas_interpret",
+]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Per-shard map with replication checking off (collectives differ)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a mapped mesh axis (usable as a Python loop bound)."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    # Older JAX: psum of a Python literal is constant-folded to an int
+    # during shard_map tracing.
+    return lax.psum(1, axis_name)
+
+
+def use_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # jax.sharding.Mesh is itself a context manager
+
+
+def tpu_compiler_params(**kwargs) -> Any:
+    """Build pltpu compiler params across the CompilerParams rename."""
+    if hasattr(pltpu, "CompilerParams"):
+        return pltpu.CompilerParams(**kwargs)
+    # TPUCompilerParams has no has_side_effects; DMA kernels stay alive via
+    # their (always-consumed) outputs.
+    kwargs.pop("has_side_effects", None)
+    return pltpu.TPUCompilerParams(**kwargs)
+
+
+def pallas_interpret(enable: bool):
+    """Value for ``pallas_call(interpret=...)`` that fully interprets on CPU
+    (including cross-device DMAs) when ``enable`` is true."""
+    if not enable:
+        return False
+    if hasattr(pltpu, "InterpretParams"):
+        return pltpu.InterpretParams()
+    return True

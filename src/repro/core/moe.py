@@ -14,8 +14,21 @@ Backends (selectable per call, identical numerics up to dispatch order):
                     compute + reverse all_to_all.
   ``megakernel``  — expert parallelism where dispatch/combine are the
                     Pallas remote-DMA kernel with a Perseus signaling
-                    schedule (`repro.kernels.moe_dispatch`) — the paper's
-                    fine-grained overlapped path, TPU-native.
+                    schedule (`repro.kernels.moe_dispatch`), but expert
+                    compute is still a *separate* staged call: the dispatch
+                    kernel drains every recv semaphore before the first
+                    GEMM can start (a structural all-recv barrier).
+  ``fused``       — the paper's true megakernel shape: dispatch remote-DMAs,
+                    per-tile expert gated-MLP and combine remote-DMAs run in
+                    ONE persistent Pallas kernel
+                    (`repro.kernels.fused_megakernel`).  Each expert tile's
+                    compute begins the moment *its* recv semaphore fires
+                    (double-buffered HBM->VMEM loads), and each tile's
+                    return DMA is released as soon as it retires — no
+                    inter-stage barrier.  ``cfg.schedule`` still selects the
+                    sender-side issue discipline (coupled / decoupled /
+                    nic_ordered / perseus), so staged-vs-fused is a clean
+                    A/B at fixed signaling semantics.
 
 All backends share `topk_routing`, so token->expert assignment (including
 capacity drops) is bit-identical and outputs can be compared directly.
@@ -32,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.core.routing import RoutingInfo, expert_capacity, topk_routing
 
 __all__ = ["MoEParams", "MoEConfig", "init_moe", "moe_apply"]
@@ -180,7 +194,7 @@ def _ep_body(
 ) -> jax.Array:
     """Per-rank EP body. params_local holds E/P experts; gate is replicated."""
     ep = cfg.ep_axis
-    n_ranks = jax.lax.axis_size(ep)
+    n_ranks = compat.axis_size(ep)
     E, k = cfg.n_experts, cfg.top_k
     e_local = E // n_ranks
     T_local = x_local.shape[0]
@@ -193,6 +207,20 @@ def _ep_body(
     # (E, C, H) send buffers, grouped by destination rank:
     buf = _dispatch_to_buffers(x_local.astype(cfg.dtype), info, E, cap)
     buf = buf.reshape(n_ranks, e_local, cap, -1)           # (P, e, C, H)
+
+    if backend == "fused":
+        # One persistent kernel: dispatch DMAs + per-tile expert FFN +
+        # combine DMAs, no inter-stage barrier (see fused_megakernel.py).
+        from repro.kernels import fused_megakernel as fk
+
+        back = fk.fused_moe_dispatch(
+            buf,
+            params_local["w1"], params_local["w3"], params_local["w2"],
+            axis_name=ep, schedule=cfg.schedule,
+            activation=cfg.activation,
+        )                                                  # (P, e, C, H)
+        back = back.reshape(E, cap, -1)
+        return _combine_from_buffers(back, info, cap, x_local.dtype)
 
     if backend == "collective":
         # Bulk-synchronous ALLTOALL (the NCCL-style baseline).
@@ -238,7 +266,7 @@ def _ep_body_replicated(
     results are summed over the EP axis — an all-reduce instead of two
     all-to-alls (the standard decode-time EP layout)."""
     ep = cfg.ep_axis
-    n_ranks = jax.lax.axis_size(ep)
+    n_ranks = compat.axis_size(ep)
     rank = jax.lax.axis_index(ep)
     E, k = cfg.n_experts, cfg.top_k
     e_local = E // n_ranks
@@ -272,8 +300,9 @@ def moe_apply(
 ) -> jax.Array:
     """Apply the MoE block.
 
-    ``collective``/``megakernel``: ``x`` is (T, H) with T sharded over
-    ``cfg.token_axes`` (EP all_to_all runs over the last axis).
+    ``collective``/``megakernel``/``fused``: ``x`` is (T, H) with T sharded
+    over ``cfg.token_axes`` (EP dispatch runs over the last axis); ``fused``
+    additionally folds the expert gated-MLP into the dispatch kernel.
     ``replicated``: T sharded over the non-EP token axes only; the EP axis
     contributes a psum (decode-time layout).  Expert weights are sharded
     over their leading (expert) axis; the gate is replicated.
@@ -282,10 +311,27 @@ def moe_apply(
         return moe_dense(params, cfg, x)
     if backend == "gathered":
         return moe_gathered(params, cfg, x)
-    if backend not in ("collective", "megakernel", "replicated"):
+    if backend not in ("collective", "megakernel", "fused", "replicated"):
         raise ValueError(backend)
 
     ep = cfg.ep_axis
+    if backend in ("megakernel", "fused") and mesh is not None:
+        # The Pallas dispatch kernels address peers by flat LOGICAL device
+        # id, which only coincides with the EP axis index when every other
+        # mesh axis is trivial.  On a multi-axis mesh the DMAs would land
+        # on devices in a *different* row of the non-EP axes — silently
+        # corrupting data — so refuse instead (ROADMAP open item).
+        extra = 1
+        for a, s in mesh.shape.items():
+            if a != ep:
+                extra *= s
+        if extra > 1:
+            raise NotImplementedError(
+                f"backend={backend!r} requires a mesh whose only "
+                f"non-trivial axis is the EP axis {ep!r}; got "
+                f"{dict(mesh.shape)}. Use backend='collective' or "
+                "'replicated' on multi-axis meshes."
+            )
     param_specs = MoEParams(
         w_gate=P(),
         w1=P(ep), w3=P(ep), w2=P(ep),
@@ -302,11 +348,10 @@ def moe_apply(
             tokens_spec if tokens_spec is not None else P(cfg.token_axes)
         )
         body = functools.partial(_ep_body, cfg=cfg, backend=backend)
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(param_specs, tokens_spec),
         out_specs=tokens_spec,
-        check_vma=False,
     )
     return mapped(params, x)

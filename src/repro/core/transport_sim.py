@@ -381,9 +381,14 @@ def simulate_proxy(
         else:  # pragma: no cover
             raise ValueError(op.kind)
 
-    # PUT-only schedules: consumers still need the data itself.
-    for tag, arr in data_arrival.items():
-        signal_visible.setdefault(tag, arr if not _has_signals(ops) else arr)
+    # PUT-only schedules carry no signals: a consumer can only observe the
+    # payload itself, so the tile becomes consumable at data arrival.  When
+    # the schedule DOES carry signals, a PUT without a matching signal is
+    # never announced to the receiver — leave it out of signal_visible
+    # rather than silently aliasing it to the arrival time.
+    if not _has_signals(ops):
+        for tag, arr in data_arrival.items():
+            signal_visible.setdefault(tag, arr)
     total = max(end_time, now) - start_time
     return SimResult(
         events=events,
@@ -537,15 +542,28 @@ def simulate_moe_layer(
     schedule: ScheduleKind | str = ScheduleKind.COUPLED,
     group_size: int | None = None,
     skew_zipf: float = 0.0,
+    fused: bool = True,
 ) -> LayerResult:
     """One MoE layer (dispatch -> expert GEMMs -> combine) on one PE.
 
     Symmetric-traffic assumption: the tiles this PE *receives* have the same
     arrival-time distribution as the signal-visibility times of the tiles it
     *sends* (all PEs run the identical program on identically-sized shards).
-    Expert compute is a single aggregate-GPU work queue: a tile's GEMMs may
-    start once its signal is visible; combine PUTs are released as their
-    tile's compute retires (tile-granular overlap, §2.3).
+    Expert compute is a single aggregate-GPU work queue.
+
+    ``fused`` (default, the paper's megakernel and our ``backend="fused"``
+    Pallas kernel): a tile's GEMMs may start the moment *its own* signal is
+    visible, and its combine PUT is released as soon as its compute retires
+    — tile-granular overlap, §2.3.
+
+    ``fused=False`` models the *staged* path (``backend="megakernel"``:
+    dispatch kernel, then a separate expert-FFN call, then a combine
+    kernel): expert compute cannot start until **every** tile's signal is
+    visible (the dispatch kernel's all-recv drain), and no combine PUT is
+    released until **all** expert compute has finished — the two hidden
+    barriers this repo's fused kernel removes.  The per-tile ready/release
+    times of the two modes mirror the respective kernels, so modeled
+    figures and the Pallas implementations agree on the mechanism.
     """
     kind = ScheduleKind(schedule)
     P = n_nodes * pe_per_node
@@ -591,49 +609,65 @@ def simulate_moe_layer(
 
     # ---- receive-side compute queue ------------------------------------
     # Mirrored arrivals: remote tiles become ready at the sender-side
-    # signal-visible times; intra-node tiles ride NVLink.
+    # signal-visible times; intra-node tiles ride NVLink.  The staged path
+    # (fused=False) inserts the dispatch kernel's all-recv barrier: nothing
+    # computes until the last signal is visible.
     interference = transport.sm_interference
     # Subscriber decode + scheduler enqueue per arriving tile (§2.3's
     # megakernel "OS"): small but bounds the speedup floor at tiny S.
     recv_tile_us = 1.0
-    jobs: list[tuple[float, float]] = []  # (ready_us, duration_us)
-    for t in transfers:
-        ready = dispatch.signal_visible.get(t.tag, dispatch.total_time)
+    nv_per_tile = NVLINK.alpha_us + 2.0  # staging + NVLink store
+    # Staged path: the dispatch kernel drains *every* recv before returning
+    # — the remote signals AND the intra-node tiles' local DMAs.
+    all_recv_barrier = max(
+        [dispatch.signal_visible.get(t.tag, dispatch.total_time)
+         for t in transfers]
+        + ([nv_per_tile] if local_tags else []),
+        default=0.0,
+    )
+    # (ready_us, duration_us, transfer index | -1 for intra-node tiles)
+    jobs: list[tuple[float, float, int]] = []
+    for idx, t in enumerate(transfers):
+        if fused:
+            ready = dispatch.signal_visible.get(t.tag, dispatch.total_time)
+        else:
+            ready = all_recv_barrier
         d = recv_tile_us + gpu.us_for_flops(
             tok_of_tag[t.tag] * spec.flops_per_token_expert(), interference
         )
-        jobs.append((ready, d))
-    nv_per_tile = NVLINK.alpha_us + 2.0  # staging + NVLink store
+        jobs.append((ready, d, idx))
     for lt, tok in local_tags:
         d = recv_tile_us + gpu.us_for_flops(
             tok * spec.flops_per_token_expert(), interference
         )
-        jobs.append((nv_per_tile, d))
+        jobs.append((nv_per_tile if fused else all_recv_barrier, d, -1))
 
     jobs.sort()
     clock = 0.0
     busy = 0.0
+    # Keyed by *original transfer index* (jobs.sort() reorders the queue),
+    # so the combine phase below releases each PUT at its own tile's retire
+    # time, not an unrelated job's.
     finish_times: dict[int, float] = {}
-    order: list[tuple[float, float, int]] = [
-        (r, d, i) for i, (r, d) in enumerate(jobs)
-    ]
     first_start = math.inf
-    for r, d, i in order:
+    for r, d, idx in jobs:
         start = max(clock, r)
         first_start = min(first_start, start)
         clock = start + d
         busy += d
-        finish_times[i] = clock
-    compute_span = clock - (first_start if order else 0.0)
+        if idx >= 0:
+            finish_times[idx] = clock
+    compute_span = clock - (first_start if jobs else 0.0)
 
-    # ---- combine: return tiles as compute retires ----------------------
+    # ---- combine: return tiles as compute retires (fused) or after the
+    # staged path's global compute barrier (separate combine kernel) ------
     combine_transfers: list[Transfer] = []
     ready_times: dict[int, float] = {}
     for idx, t in enumerate(transfers):
         ct = Transfer(tag=10_000 + t.tag, dest_pe=t.dest_pe,
                       nbytes=t.nbytes, dest_node=t.dest_node)
         combine_transfers.append(ct)
-        ready_times[ct.tag] = finish_times[idx]
+        ready_times[ct.tag] = finish_times[idx] if fused else clock
     combine = simulate_proxy(
         build_schedule(combine_transfers, kind if kind is not
                        ScheduleKind.PUT_ONLY else ScheduleKind.PUT_ONLY,
@@ -661,7 +695,7 @@ def simulate_moe_layer(
         combine=combine,
         compute_busy_us=busy,
         compute_span_us=compute_span,
-        first_compute_us=first_start if order else 0.0,
+        first_compute_us=first_start if jobs else 0.0,
         n_remote_transfers=len(transfers),
     )
 
@@ -691,12 +725,15 @@ def simulate_forward(
     schedule: ScheduleKind | str = ScheduleKind.COUPLED,
     group_size: int | None = None,
     skew_zipf: float = 0.0,
+    fused: bool = True,
     cross_layer_overlap: float = CROSS_LAYER_OVERLAP,
 ) -> float:
     """Forward-pass latency (us) over all MoE layers.
 
     Per-layer latency = compute floor + the communication overhead that
     survives cross-layer overlap (see ``CROSS_LAYER_OVERLAP``).
+    ``fused`` selects tile-granular overlap vs the staged barriers (see
+    ``simulate_moe_layer``).
     """
     layer = simulate_moe_layer(
         spec,
@@ -708,6 +745,7 @@ def simulate_forward(
         schedule=schedule,
         group_size=group_size,
         skew_zipf=skew_zipf,
+        fused=fused,
     )
     overhead = gpu.us_for_flops(
         tokens_per_pe * spec.attn_flops_per_token(),

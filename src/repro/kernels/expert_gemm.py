@@ -31,7 +31,43 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["expert_ffn"]
+from repro import compat
+
+__all__ = ["expert_ffn", "tile_ffn"]
+
+
+def tile_ffn(x, w1, w3, w2, *, activation: str, f_start=0,
+             f_total: int | None = None):
+    """In-kernel gated-MLP body over one (token tile, F slice).
+
+    The reusable compute core shared by this module's grid kernel and the
+    fused dispatch+compute megakernel (``fused_megakernel.py``).  Operands
+    are VMEM-resident arrays (NOT refs): ``x (bt, H)``, ``w1/w3 (H, bf)``,
+    ``w2 (bf, H)``.  Returns the f32 ``(bt, H)`` partial sum contributed by
+    this F slice; callers accumulate over slices (or pass the full F as one
+    slice).
+
+    ``f_total`` enables ragged-tail masking: when set, columns of the slice
+    at global F index >= f_total are zeroed on *both* operands (padded
+    w1/w3 columns and w2 rows hold garbage — NaN in interpret mode — and
+    0*NaN = NaN would poison the reduction).
+    """
+    h1 = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+    h3 = jnp.dot(x, w3, preferred_element_type=jnp.float32)
+    if activation == "silu":
+        h = jax.nn.silu(h1) * h3
+    elif activation == "gelu":
+        h = jax.nn.gelu(h1) * h3
+    else:
+        raise ValueError(activation)
+    if f_total is not None:
+        col = f_start + jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+        h = jnp.where(col < f_total, h, 0.0)
+        row = f_start + jax.lax.broadcasted_iota(jnp.int32, w2.shape, 0)
+        w2 = jnp.where(row < f_total, w2, 0)
+    return jnp.dot(
+        h.astype(x.dtype), w2, preferred_element_type=jnp.float32
+    )
 
 
 def _kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref, acc_ref, *, n_f: int,
@@ -43,26 +79,10 @@ def _kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref, acc_ref, *, n_f: int,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[0]                                   # (bt, H)
-    h1 = jnp.dot(x, w1_ref[0], preferred_element_type=jnp.float32)
-    h3 = jnp.dot(x, w3_ref[0], preferred_element_type=jnp.float32)
-    if activation == "silu":
-        h = jax.nn.silu(h1) * h3
-    elif activation == "gelu":
-        h = jax.nn.gelu(h1) * h3
-    else:
-        raise ValueError(activation)
-    bf = h.shape[-1]
-    w2 = w2_ref[0]
-    if f_total % bf:
-        # Mask the ragged tail of the F axis on *both* operands: padded
-        # w1/w3 columns and w2 rows hold garbage (NaN in interpret mode),
-        # and 0*NaN = NaN would poison the reduction.
-        col = f * bf + jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
-        h = jnp.where(col < f_total, h, 0.0)
-        row = f * bf + jax.lax.broadcasted_iota(jnp.int32, w2.shape, 0)
-        w2 = jnp.where(row < f_total, w2, 0)
-    acc_ref[...] += jnp.dot(
-        h.astype(x.dtype), w2, preferred_element_type=jnp.float32
+    bf = w1_ref.shape[-1]
+    acc_ref[...] += tile_ffn(
+        x, w1_ref[0], w3_ref[0], w2_ref[0], activation=activation,
+        f_start=f * bf, f_total=f_total if f_total % bf else None,
     )
 
     @pl.when(f == n_f - 1)
@@ -105,7 +125,7 @@ def expert_ffn(
         out_shape=jax.ShapeDtypeStruct((E, T, H), x.dtype),
         scratch_shapes=[pltpu.VMEM((bt, H), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(x, w1, w3, w2)

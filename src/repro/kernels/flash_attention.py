@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 __all__ = ["flash_attention"]
 
 _NEG_INF = -1e30
@@ -127,7 +129,7 @@ def flash_attention(
             pltpu.VMEM((bq, D), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=(
                 "parallel", "parallel", "parallel", "arbitrary"
             ),

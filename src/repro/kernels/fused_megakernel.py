@@ -1,0 +1,312 @@
+"""Fused MoE megakernel: dispatch -> expert GEMMs -> combine in ONE kernel.
+
+The staged path (``moe_dispatch.remote_dispatch`` followed by a separate
+expert-FFN call) still contains the paper's *hidden serialization* in
+structural form: the dispatch kernel waits on **all** recv semaphores before
+returning, so the first expert GEMM cannot start until the last tile has
+landed — a bulk-synchronous barrier in megakernel clothing (§2.2).  This
+kernel removes it.  One ``pallas_call`` per rank:
+
+  1. **Issue** — every dispatch remote-DMA is started up front under the
+     selected sender-side discipline (same schedules as ``moe_dispatch``):
+
+       ``coupled``     per-tile ``wait_send`` drain after each start (the
+                       proxy-FENCE-per-PUT analogue, Fig. 2a);
+       ``decoupled``   per-destination-group bursts, one batched drain per
+                       group (Perseus Algorithm 1);
+       ``perseus`` /   everything in flight at once; the *terminal* drain is
+       ``nic_ordered`` deferred to kernel exit, i.e. fully overlapped with
+                       expert compute (Fig. 2d + this repo's fusion).
+
+  2. **Compute** — tiles are processed expert-major; each tile's
+     ``wait_recv`` fires on *its own* (source, expert) semaphore, so a
+     tile's gated-MLP starts the moment its payload lands.  HBM->VMEM tile
+     loads are double-buffered, with tile *i+1*'s recv-wait + prefetch
+     placed *after* tile *i*'s GEMMs so ready compute is never gated on a
+     later tile's arrival (the prefetch instead overlaps tile *i*'s
+     result-store drain and combine release).  The compute body is
+     ``expert_gemm.tile_ffn`` — the same code the standalone grid kernel
+     accumulates with.
+
+  3. **Combine** — the moment a tile's FFN output is back in HBM, its
+     return remote-DMA is released toward the source rank (per-tile
+     ``wait_send`` under ``coupled``; deferred drains otherwise).  No
+     global barrier exists anywhere between a tile landing and its result
+     departing; the only full rendezvous is the kernel-exit wait on the
+     combine recv semaphores, which is the data dependency itself.
+
+Memory plan: payload refs live in ``pl.ANY`` (HBM); ``recv``/``out``
+staging buffers are extra kernel *outputs* in ANY space (discarded by the
+wrapper — scratch cannot live in HBM).  VMEM holds one expert's weights
+plus double-buffered (C, H) activation/output tiles.  Weights are reloaded
+once per local expert (expert-major order); a production multi-layer
+persistent kernel would double-buffer those too (see ROADMAP open items).
+
+Correctness is validated on CPU in interpret mode (cross-device DMAs fully
+interpreted); on TPU the same code lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+from repro.kernels.expert_gemm import tile_ffn
+from repro.kernels.moe_dispatch import SCHEDULES
+
+__all__ = ["fused_moe_dispatch", "SCHEDULES"]
+
+
+def _fused_kernel(
+    # inputs (ANY/HBM)
+    buf_ref,          # (P, e, C, H) send tiles; buf[dst, j] -> rank dst
+    w1_ref,           # (e, H, F) local expert gate proj
+    w3_ref,           # (e, H, F) local expert up proj
+    w2_ref,           # (e, F, H) local expert down proj
+    # outputs (ANY/HBM)
+    y_ref,            # (P, e, C, H) combined returns; y[src, j] = results
+    #                   computed by expert-host `src` for MY tokens
+    recv_ref,         # (P, e, C, H) staging: tiles received for MY experts
+    out_ref,          # (P, e, C, H) staging: FFN outputs awaiting combine
+    # DMA semaphores
+    disp_send,        # (P, e)
+    disp_recv,        # (P, e)  slot [0, j] doubles as the local-copy sem
+    comb_send,        # (P, e)
+    comb_recv,        # (P, e)  slot [0, j] doubles as the local-copy sem
+    x_sem,            # (2,)  HBM->VMEM tile loads
+    o_sem,            # (2,)  VMEM->HBM result stores
+    w_sem,            # (3,)  weight loads
+    # VMEM scratch
+    x_vmem,           # (2, C, H)
+    o_vmem,           # (2, C, H)
+    w1_vmem,          # (H, F)
+    w3_vmem,          # (H, F)
+    w2_vmem,          # (F, H)
+    *,
+    num_ranks: int,
+    e_local: int,
+    axis_name: str,
+    schedule: str,
+    activation: str,
+):
+    me = lax.axis_index(axis_name)
+
+    def disp_copy(offset, j):
+        """Dispatch tile j to rank (me+offset); by symmetry the matching
+        incoming tile (from rank me-offset) lands on sem slot [offset, j]."""
+        dst = lax.rem(me + offset, num_ranks)
+        return pltpu.make_async_remote_copy(
+            src_ref=buf_ref.at[dst, j],
+            dst_ref=recv_ref.at[me, j],
+            send_sem=disp_send.at[offset, j],
+            recv_sem=disp_recv.at[offset, j],
+            device_id=dst,
+            device_id_type=pltpu.DeviceIdType.LOGICAL,
+        )
+
+    def comb_copy(offset, j):
+        """Return the tile computed for rank (me-offset) to its y[me, j];
+        incoming returns (from expert host me+offset) land on [offset, j]."""
+        src = lax.rem(me + num_ranks - offset, num_ranks)
+        return pltpu.make_async_remote_copy(
+            src_ref=out_ref.at[src, j],
+            dst_ref=y_ref.at[me, j],
+            send_sem=comb_send.at[offset, j],
+            recv_sem=comb_recv.at[offset, j],
+            device_id=src,
+            device_id_type=pltpu.DeviceIdType.LOGICAL,
+        )
+
+    def local_disp(j):
+        return pltpu.make_async_copy(
+            buf_ref.at[me, j], recv_ref.at[me, j], disp_recv.at[0, j]
+        )
+
+    def local_comb(j):
+        return pltpu.make_async_copy(
+            out_ref.at[me, j], y_ref.at[me, j], comb_recv.at[0, j]
+        )
+
+    # ---- phase 1: issue all dispatch DMAs (sender-side discipline) ------
+    for j in range(e_local):
+        local_disp(j).start()
+    deferred_disp_drains = []
+    if schedule == "coupled":
+        for offset in range(1, num_ranks):
+            for j in range(e_local):
+                c = disp_copy(offset, j)
+                c.start()
+                c.wait_send()            # proxy-FENCE analogue: per-tile drain
+    elif schedule == "decoupled":
+        for offset in range(1, num_ranks):
+            group = [disp_copy(offset, j) for j in range(e_local)]
+            for c in group:
+                c.start()
+            for c in group:
+                c.wait_send()            # one batched drain per destination
+    elif schedule in ("perseus", "nic_ordered"):
+        for offset in range(1, num_ranks):
+            for j in range(e_local):
+                c = disp_copy(offset, j)
+                c.start()
+                deferred_disp_drains.append(c)   # terminal drain at exit:
+                #                                  fully overlapped w/ compute
+    else:  # pragma: no cover
+        raise ValueError(f"unknown schedule {schedule!r}")
+
+    # ---- phase 2+3: per-tile recv-wait -> FFN -> combine release --------
+    # Expert-major order: one weight load per local expert; within an
+    # expert the (C, H) tiles from the P sources are double-buffered.
+    def tile_ready(offset, j):
+        if offset == 0:
+            local_disp(j).wait()         # self block rode the local DMA
+        else:
+            disp_copy(offset, j).wait_recv()
+
+    def start_load(offset, j, slot):
+        src = lax.rem(me + num_ranks - offset, num_ranks)
+        return pltpu.make_async_copy(
+            recv_ref.at[src, j], x_vmem.at[slot], x_sem.at[slot]
+        )
+
+    deferred_comb_drains = []
+    for j in range(e_local):
+        w_loads = [
+            pltpu.make_async_copy(w1_ref.at[j], w1_vmem, w_sem.at[0]),
+            pltpu.make_async_copy(w3_ref.at[j], w3_vmem, w_sem.at[1]),
+            pltpu.make_async_copy(w2_ref.at[j], w2_vmem, w_sem.at[2]),
+        ]
+        for c in w_loads:
+            c.start()
+        tile_ready(0, j)
+        load = start_load(0, j, 0)
+        load.start()
+        loads = {0: load}
+        for c in w_loads:
+            c.wait()
+        for offset in range(num_ranks):
+            slot = offset % 2
+            loads.pop(offset).wait()
+            y = tile_ffn(
+                x_vmem[slot], w1_vmem[...], w3_vmem[...], w2_vmem[...],
+                activation=activation,
+            )
+            o_vmem[slot] = y.astype(o_vmem.dtype)
+            src = lax.rem(me + num_ranks - offset, num_ranks)
+            store = pltpu.make_async_copy(
+                o_vmem.at[slot], out_ref.at[src, j], o_sem.at[slot]
+            )
+            store.start()
+            if offset + 1 < num_ranks:
+                # Prefetch tile i+1 into the other VMEM slot.  Its recv-wait
+                # sits AFTER tile i's GEMMs on purpose: blocking before the
+                # compute would gate ready work on a later tile's arrival —
+                # exactly the head-of-line serialization this kernel exists
+                # to remove.  The load itself overlaps tile i's result-store
+                # drain and combine release.
+                tile_ready(offset + 1, j)
+                nxt = start_load(offset + 1, j, (offset + 1) % 2)
+                nxt.start()
+                loads[offset + 1] = nxt
+            store.wait()                 # remote copy must read a full tile
+            if offset == 0:
+                local_comb(j).start()    # self result: local DMA into y
+            else:
+                c = comb_copy(offset, j)
+                c.start()                # tile retired -> release its return
+                if schedule == "coupled":
+                    c.wait_send()
+                else:
+                    deferred_comb_drains.append(c)
+
+    # ---- exit: terminal drains + the combine data dependency ------------
+    for c in deferred_disp_drains:
+        c.wait_send()
+    for c in deferred_comb_drains:
+        c.wait_send()
+    for j in range(e_local):
+        local_comb(j).wait()
+        for offset in range(1, num_ranks):
+            comb_copy(offset, j).wait_recv()
+
+
+def fused_moe_dispatch(
+    buf: jax.Array,   # (P, e_local, C, H)
+    w1: jax.Array,    # (e_local, H, F)
+    w3: jax.Array,    # (e_local, H, F)
+    w2: jax.Array,    # (e_local, F, H)
+    *,
+    axis_name: str,
+    schedule: str = "perseus",
+    activation: str = "silu",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Dispatch + expert gated-MLP + combine as one persistent Pallas kernel.
+
+    Must be called inside ``shard_map`` over ``axis_name``.  ``buf[dst]``
+    holds the expert tiles destined for rank ``dst`` (same layout as
+    ``remote_dispatch``); ``w1/w3/w2`` are this rank's local expert weights.
+
+    Returns ``(P, e_local, C, H)``: ``y[src, j]`` is the FFN output that
+    expert host ``src`` computed for the tokens this rank sent it — i.e.
+    exactly ``remote_dispatch(expert_ffn(remote_dispatch(buf)))`` of the
+    staged path, with no inter-stage barrier.
+    """
+    if schedule not in SCHEDULES:
+        raise ValueError(f"schedule must be one of {SCHEDULES}, got {schedule}")
+    num_ranks = compat.axis_size(axis_name)
+    if buf.shape[0] != num_ranks:
+        raise ValueError(
+            f"buf leading dim {buf.shape[0]} != axis size {num_ranks}"
+        )
+    e_local, cap, hidden = buf.shape[1], buf.shape[2], buf.shape[3]
+    if w1.shape[0] != e_local or w1.shape[1] != hidden:
+        raise ValueError(f"w1 {w1.shape} mismatches buf {buf.shape}")
+    d_ff = w1.shape[-1]
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+
+    kernel = functools.partial(
+        _fused_kernel,
+        num_ranks=num_ranks,
+        e_local=e_local,
+        axis_name=axis_name,
+        schedule=schedule,
+        activation=activation,
+    )
+    y, _recv, _out = pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(buf.shape, buf.dtype),   # y
+            jax.ShapeDtypeStruct(buf.shape, buf.dtype),   # recv staging
+            jax.ShapeDtypeStruct(buf.shape, buf.dtype),   # out staging
+        ),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 4,
+        out_specs=(pl.BlockSpec(memory_space=pl.ANY),) * 3,
+        scratch_shapes=[
+            pltpu.SemaphoreType.DMA((num_ranks, e_local)),   # disp_send
+            pltpu.SemaphoreType.DMA((num_ranks, e_local)),   # disp_recv
+            pltpu.SemaphoreType.DMA((num_ranks, e_local)),   # comb_send
+            pltpu.SemaphoreType.DMA((num_ranks, e_local)),   # comb_recv
+            pltpu.SemaphoreType.DMA((2,)),                   # x_sem
+            pltpu.SemaphoreType.DMA((2,)),                   # o_sem
+            pltpu.SemaphoreType.DMA((3,)),                   # w_sem
+            pltpu.VMEM((2, cap, hidden), buf.dtype),
+            pltpu.VMEM((2, cap, hidden), buf.dtype),
+            pltpu.VMEM((hidden, d_ff), w1.dtype),
+            pltpu.VMEM((hidden, d_ff), w3.dtype),
+            pltpu.VMEM((d_ff, hidden), w2.dtype),
+        ],
+        interpret=compat.pallas_interpret(interpret),
+        compiler_params=compat.tpu_compiler_params(
+            has_side_effects=True,
+            collective_id=8,
+        ),
+    )(buf, w1, w3, w2)
+    return y

@@ -29,6 +29,14 @@ Receive side is schedule-independent: the rank waits on the per-source
 recv semaphores (the "subscriber" of §2.3) and the tile is then ready for
 expert compute.
 
+NOTE — this is the *staged* path: the kernel drains **all** recv semaphores
+before returning, so expert compute (a separate ``expert_gemm`` call)
+cannot start until the last tile has landed, and the combine is a second
+full dispatch after all compute retires.  That all-recv barrier is exactly
+the hidden serialization the paper targets; ``fused_megakernel.py`` removes
+it by folding per-tile expert compute and combine release into this kernel
+(``backend="fused"``).  The staged path is kept for A/B benchmarking.
+
 Communication kernels move HBM->HBM via the DMA engines, so refs live in
 ``pl.ANY`` memory space (no VMEM tiling — the compute kernels in
 ``expert_gemm.py``/``flash_attention.py`` own the VMEM BlockSpec story).
@@ -46,6 +54,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 __all__ = ["remote_dispatch", "SCHEDULES"]
 
@@ -82,8 +92,8 @@ def _dispatch_kernel(
             dst_ref=out_ref.at[my_id, j],
             send_sem=send_sems.at[offset, j],
             recv_sem=recv_sems.at[offset, j],
-            device_id=(dst,),
-            device_id_type=pltpu.DeviceIdType.MESH,
+            device_id=dst,
+            device_id_type=pltpu.DeviceIdType.LOGICAL,
         )
 
     # ---- sender-side issue discipline (the paper's schedules) -----------
@@ -149,7 +159,7 @@ def remote_dispatch(
     """
     if schedule not in SCHEDULES:
         raise ValueError(f"schedule must be one of {SCHEDULES}, got {schedule}")
-    num_ranks = lax.axis_size(axis_name)
+    num_ranks = compat.axis_size(axis_name)
     if buf.shape[0] != num_ranks:
         raise ValueError(
             f"buf leading dim {buf.shape[0]} != axis size {num_ranks}"
@@ -175,8 +185,8 @@ def remote_dispatch(
             pltpu.SemaphoreType.DMA((num_ranks, e_local)),
             pltpu.SemaphoreType.DMA((num_ranks, e_local)),
         ],
-        interpret=pltpu.InterpretParams() if interpret else False,
-        compiler_params=pltpu.CompilerParams(
+        interpret=compat.pallas_interpret(interpret),
+        compiler_params=compat.tpu_compiler_params(
             has_side_effects=True,
             collective_id=7,
         ),

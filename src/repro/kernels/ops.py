@@ -14,19 +14,23 @@ import jax.numpy as jnp
 
 from repro.kernels import expert_gemm as _expert_gemm
 from repro.kernels import flash_attention as _flash
+from repro.kernels import fused_megakernel as _fused
 from repro.kernels import moe_dispatch as _dispatch
 from repro.kernels import ssd_scan as _ssd
 
 __all__ = [
     "remote_dispatch",
+    "fused_moe_dispatch",
     "expert_ffn",
     "flash_attention",
     "ssd_scan",
 ]
 
-# Re-export: remote_dispatch must run *inside* shard_map, so it cannot be
-# independently jit'd here; the MoE block owns its jit boundary.
+# Re-export: remote_dispatch / fused_moe_dispatch must run *inside*
+# shard_map, so they cannot be independently jit'd here; the MoE block owns
+# its jit boundary.
 remote_dispatch = _dispatch.remote_dispatch
+fused_moe_dispatch = _fused.fused_moe_dispatch
 
 
 @functools.partial(

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 __all__ = ["ssd_scan"]
 
 
@@ -116,7 +118,7 @@ def ssd_scan(
         out_shape=jax.ShapeDtypeStruct((B, H, L, Dh), x.dtype),
         scratch_shapes=[pltpu.VMEM((N, Dh), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(xh, dth, ah, bh, ch)

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig, LM_SHAPES, ShapeSpec
 from repro.configs.registry import ASSIGNED, ALL_ARCHS, cell_supported, get_config
 from repro.data.synthetic import make_batch_struct
@@ -303,7 +304,7 @@ def _lower_compile(cfg, shape, mesh, moe_train_backend, *,
         cfg, shape, mesh, moe_train_backend=moe_train_backend,
         quant_opt=quant_opt,
     )
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         lowered = jax.jit(
             fn, in_shardings=in_sh, donate_argnums=donate
         ).lower(*args)
@@ -467,7 +468,7 @@ def main(argv=None) -> int:
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--tag", default="", help="variant tag for perf iters")
     ap.add_argument("--moe-backend", default="collective",
-                    choices=["collective", "megakernel"])
+                    choices=["collective", "megakernel", "fused"])
     args = ap.parse_args(argv)
 
     archs = list(ASSIGNED) if args.all or not args.arch else [args.arch]

@@ -14,9 +14,11 @@ Entry points (all pure):
   ``decode_step(params, cfg, tokens_t, caches, pos, ...)``-> (logits, caches)
 
 MoE FFN slots route through ``repro.core.moe`` — backend ``gathered`` on a
-single device, ``collective`` (shard_map all_to_all over the EP axis) or
-``megakernel`` (Pallas remote-DMA dispatch) under a mesh, and ``replicated``
-for decode where tokens are replicated across the EP axis.
+single device; under a mesh ``collective`` (shard_map all_to_all over the EP
+axis), ``megakernel`` (staged Pallas remote-DMA dispatch) or ``fused``
+(dispatch + expert FFN + combine in one Pallas kernel, tile-granular
+overlap); and ``replicated`` for decode where tokens are replicated across
+the EP axis.
 """
 
 from __future__ import annotations

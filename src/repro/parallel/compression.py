@@ -14,6 +14,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 __all__ = ["quantize_int8", "dequantize_int8", "compressed_psum",
            "ef_compress_grads"]
 
@@ -49,7 +51,7 @@ def ef_compress_grads(grads, residual, axis_name: str):
 
     def one(g, r):
         g = g + r
-        synced = compressed_psum(g, axis_name) / jax.lax.axis_size(axis_name)
+        synced = compressed_psum(g, axis_name) / compat.axis_size(axis_name)
         # residual = what this rank contributed minus what quantization kept
         scale = jax.lax.pmax(jnp.max(jnp.abs(g)), axis_name) / 127.0 + 1e-12
         kept = jnp.clip(jnp.round(g / scale), -127, 127) * scale

@@ -19,6 +19,8 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["pipeline_apply"]
@@ -90,11 +92,10 @@ def pipeline_apply(
         )
         return total
 
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False,
     )
     return mapped(stage_params, x)

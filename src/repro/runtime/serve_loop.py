@@ -40,6 +40,14 @@ class ServeConfig:
     max_len: int = 256
     greedy: bool = True
     temperature: float = 1.0
+    # MoE dispatch backend for decode steps: "gathered" on a single device;
+    # under a mesh, "replicated" (psum layout), "collective" (ALLTOALL),
+    # "megakernel" (staged Pallas dispatch) or "fused" (dispatch + expert
+    # FFN + combine in one kernel — the overhead-dominated decode regime is
+    # exactly where its tile-granular overlap matters, §8).
+    moe_backend: str = "gathered"
+    mesh: Any = None
+    moe_token_axes: tuple[str, ...] = ("data", "model")
 
 
 class Server:
@@ -57,7 +65,9 @@ class Server:
         self.rng = np.random.RandomState(seed)
         self._step = jax.jit(
             lambda p, t, c, pos: model.decode_step(
-                p, t, c, pos, memory=memory
+                p, t, c, pos, memory=memory,
+                moe_backend=cfg.moe_backend, mesh=cfg.mesh,
+                moe_token_axes=cfg.moe_token_axes,
             )
         )
 

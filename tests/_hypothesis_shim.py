@@ -1,0 +1,118 @@
+"""Minimal deterministic stand-in for ``hypothesis`` when it's not installed.
+
+The property tests in this suite only use a small slice of the hypothesis
+API (``given``/``settings`` plus a handful of strategies).  When the real
+package is available it is always preferred (see ``conftest.py``); this shim
+exists so the tier-1 suite still *runs* the property tests — as seeded
+random sweeps with a bounded example count — instead of erroring at
+collection on an optional dependency.
+
+Differences from real hypothesis (acceptable for a smoke fallback):
+  * no shrinking, no example database, no health checks;
+  * example count is capped at ``MAX_EXAMPLES_CAP`` regardless of
+    ``settings(max_examples=...)``;
+  * draws are seeded per-test-function (CRC32 of the name) so failures
+    reproduce across runs.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+MAX_EXAMPLES_CAP = 25
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+
+def one_of(*strategies):
+    strategies = list(strategies)
+    return _Strategy(lambda r: strategies[r.randrange(len(strategies))].sample(r))
+
+
+def none():
+    return _Strategy(lambda r: None)
+
+
+def just(value):
+    return _Strategy(lambda r: value)
+
+
+def settings(max_examples: int = 20, **_ignored):
+    """Decorator recording the example budget (deadline etc. are ignored)."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    """Keyword-only ``given``: runs the test over seeded random draws."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            budget = min(
+                getattr(wrapper, "_shim_max_examples", 20), MAX_EXAMPLES_CAP
+            )
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(budget):
+                drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                fn(*args, **drawn, **kwargs)
+
+        # Hide the drawn parameters from pytest's fixture resolution: the
+        # wrapper itself takes no arguments beyond pass-through fixtures.
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        params = [
+            p for name, p in inspect.signature(fn).parameters.items()
+            if name not in strategies
+        ]
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` / ``hypothesis.strategies``."""
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "one_of",
+                 "none", "just"):
+        setattr(st, name, globals()[name])
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__is_shim__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

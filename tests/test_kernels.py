@@ -52,6 +52,35 @@ def test_expert_ffn_activations(activation):
     assert_allclose(np.asarray(got), np.asarray(exp), rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("e_local,C,H,F", [
+    (1, 8, 16, 8),
+    (3, 8, 24, 40),          # non-power-of-two shapes
+])
+def test_fused_megakernel_single_rank_matches_ffn_ref(e_local, C, H, F):
+    """Kernel-level oracle for the fused megakernel on a 1-rank mesh: the
+    dispatch/combine DMAs degenerate to local copies and the output must be
+    exactly the per-expert gated MLP of the input tiles."""
+    import functools
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro import compat
+    from repro.kernels.fused_megakernel import fused_moe_dispatch
+
+    x = jnp.asarray(RNG.randn(1, e_local, C, H), jnp.float32) * 0.3
+    w1 = jnp.asarray(RNG.randn(e_local, H, F), jnp.float32) * 0.2
+    w3 = jnp.asarray(RNG.randn(e_local, H, F), jnp.float32) * 0.2
+    w2 = jnp.asarray(RNG.randn(e_local, F, H), jnp.float32) * 0.2
+    mesh = Mesh(np.array(jax.devices()[:1]), ("model",))
+    f = compat.shard_map(
+        functools.partial(fused_moe_dispatch, axis_name="model"),
+        mesh=mesh, in_specs=(P("model"), P(), P(), P()),
+        out_specs=P("model"),
+    )
+    got = jax.jit(f)(x, w1, w3, w2)[0]          # (e, C, H)
+    exp = ref.expert_ffn_ref(x[0], w1, w3, w2)
+    assert_allclose(np.asarray(got), np.asarray(exp), rtol=2e-5, atol=2e-5)
+
+
 # --------------------------------------------------------------------------
 # flash_attention
 # --------------------------------------------------------------------------

@@ -125,6 +125,7 @@ _MULTIDEV_SCRIPT = textwrap.dedent("""
     sys.path.insert(0, {src!r})
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import Mesh, PartitionSpec as P
+    from repro import compat
     from repro.core.moe import MoEConfig, init_moe, moe_apply
 
     cfg = MoEConfig(d_model=32, d_ff=64, n_experts=8, top_k=2,
@@ -134,17 +135,32 @@ _MULTIDEV_SCRIPT = textwrap.dedent("""
     x = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
     dense = moe_apply(params, cfg, x, backend="dense")
     mesh = Mesh(np.array(jax.devices()), ("model",))
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         coll = jax.jit(lambda p, x: moe_apply(
             p, cfg, x, backend="collective", mesh=mesh))(params, x)
         mk = jax.jit(lambda p, x: moe_apply(
             p, cfg, x, backend="megakernel", mesh=mesh))(params, x)
+        fus = jax.jit(lambda p, x: moe_apply(
+            p, cfg, x, backend="fused", mesh=mesh))(params, x)
         rep = jax.jit(lambda p, x: moe_apply(
             p, cfg, x, backend="replicated", mesh=mesh))(params, x)
     for name, got in [("collective", coll), ("megakernel", mk),
-                      ("replicated", rep)]:
+                      ("fused", fus), ("replicated", rep)]:
         err = float(jnp.abs(got - dense).max())
         assert err < 1e-4, (name, err)
+
+    # Pallas dispatch kernels address peers by flat logical device id:
+    # a multi-axis mesh must be refused, not silently corrupted.
+    mesh2 = jax.make_mesh((2, 2), ("data", "model"))
+    cfg2 = MoEConfig(d_model=32, d_ff=64, n_experts=8, top_k=2,
+                     dtype=jnp.float32, capacity_factor=8.0,
+                     token_axes=("data", "model"))
+    for be in ("megakernel", "fused"):
+        try:
+            moe_apply(params, cfg2, x, backend=be, mesh=mesh2)
+            raise AssertionError(f"{{be}}: multi-axis mesh not refused")
+        except NotImplementedError:
+            pass
     print("MULTIDEV_OK")
 """)
 
@@ -156,6 +172,7 @@ _DISPATCH_SWEEP_SCRIPT = textwrap.dedent("""
     import functools
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import Mesh, PartitionSpec as P
+    from repro import compat
     from repro.kernels.moe_dispatch import remote_dispatch
     from repro.kernels.ref import dispatch_ref
 
@@ -171,26 +188,62 @@ _DISPATCH_SWEEP_SCRIPT = textwrap.dedent("""
     for P_, E_, C, H, dt, sched in cases:
         mesh = Mesh(devs[:P_], ("model",))
         g = rng.randn(P_ * P_, E_, C, H).astype(dt)
-        f = jax.shard_map(
+        f = compat.shard_map(
             functools.partial(remote_dispatch, axis_name="model",
                               schedule=sched),
-            mesh=mesh, in_specs=P("model"), out_specs=P("model"),
-            check_vma=False)
+            mesh=mesh, in_specs=P("model"), out_specs=P("model"))
         got = np.asarray(jax.jit(f)(jnp.asarray(g)))
         exp = np.asarray(dispatch_ref(jnp.asarray(g), P_))
         assert np.allclose(got, exp), (P_, E_, C, H, dt, sched)
     # bf16 payloads
     mesh = Mesh(devs[:4], ("model",))
     g = jnp.asarray(rng.randn(16, 2, 8, 16), jnp.bfloat16)
-    f = jax.shard_map(
+    f = compat.shard_map(
         functools.partial(remote_dispatch, axis_name="model",
                           schedule="perseus"),
-        mesh=mesh, in_specs=P("model"), out_specs=P("model"),
-        check_vma=False)
+        mesh=mesh, in_specs=P("model"), out_specs=P("model"))
     got = jax.jit(f)(g)
     exp = dispatch_ref(g, 4)
     assert jnp.array_equal(got, exp)   # pure data movement: bit-exact
     print("DISPATCH_SWEEP_OK")
+""")
+
+_FUSED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys
+    sys.path.insert(0, {src!r})
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro.core.moe import MoEConfig, init_moe, moe_apply
+
+    mesh = Mesh(np.array(jax.devices()), ("model",))
+
+    def check(cfg, T, tol):
+        params = init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (T, cfg.d_model))
+        dense = moe_apply(params, cfg, x, backend="dense")
+        fused = jax.jit(lambda p, x: moe_apply(
+            p, cfg, x, backend="fused", mesh=mesh))(params, x)
+        err = float(jnp.abs(fused.astype(jnp.float32)
+                            - dense.astype(jnp.float32)).max())
+        assert err < tol, (cfg.schedule, cfg.n_experts, T, err)
+
+    # all four signaling schedules at a prefill-size batch (E=8, k=2)
+    for sched in ("coupled", "decoupled", "nic_ordered", "perseus"):
+        check(MoEConfig(d_model=32, d_ff=64, n_experts=8, top_k=2,
+                        dtype=jnp.float32, capacity_factor=8.0,
+                        token_axes=("model",), schedule=sched), 64, 1e-4)
+    # decode-size batch: one token per rank (E=16, k=4), all schedules
+    for sched in ("coupled", "decoupled", "nic_ordered", "perseus"):
+        check(MoEConfig(d_model=16, d_ff=32, n_experts=16, top_k=4,
+                        dtype=jnp.float32, capacity_factor=4.0,
+                        token_axes=("model",), schedule=sched), 4, 1e-4)
+    # bf16 payloads within bf16 tolerance
+    check(MoEConfig(d_model=32, d_ff=64, n_experts=8, top_k=2,
+                    dtype=jnp.bfloat16, capacity_factor=8.0,
+                    token_axes=("model",), schedule="perseus"), 64, 5e-2)
+    print("FUSED_SWEEP_OK")
 """)
 
 
@@ -217,3 +270,35 @@ def test_ep_backends_match_dense_multidevice():
         capture_output=True, text=True, timeout=900,
     )
     assert "MULTIDEV_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_fused_backend_matches_dense_multidevice():
+    """Acceptance sweep for backend="fused": all four signaling schedules
+    x {prefill-size (E=8,P=4,k=2), decode-size (E=16,P=4,k=4, one token
+    per rank)} against the dense oracle, plus a bf16 case, on a CPU mesh
+    in interpret mode."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-c", _FUSED_SCRIPT.format(
+            src=os.path.abspath(src))],
+        capture_output=True, text=True, timeout=900,
+    )
+    assert "FUSED_SWEEP_OK" in r.stdout, r.stdout + r.stderr[-3000:]
+
+
+def test_fused_backend_single_rank():
+    """In-process smoke: on a 1-rank mesh the fused kernel reduces to the
+    local DMA + per-expert FFN path and must still match the oracle."""
+    from jax.sharding import Mesh
+
+    cfg = _cfg(token_axes=("model",))
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model))
+    dense = moe_apply(params, cfg, x, backend="dense")
+    mesh = Mesh(np.array(jax.devices()[:1]), ("model",))
+    fused = jax.jit(
+        lambda p, x: moe_apply(p, cfg, x, backend="fused", mesh=mesh)
+    )(params, x)
+    assert_allclose(np.asarray(fused), np.asarray(dense),
+                    rtol=1e-4, atol=1e-4)

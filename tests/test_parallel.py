@@ -59,6 +59,7 @@ def test_compressed_psum_multidevice():
         import sys; sys.path.insert(0, {SRC!r})
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, PartitionSpec as P
+        from repro import compat
         from repro.parallel.compression import compressed_psum
 
         mesh = Mesh(np.array(jax.devices()), ("pod",))
@@ -67,9 +68,8 @@ def test_compressed_psum_multidevice():
         def body(xs):
             return compressed_psum(xs[0], "pod")
 
-        out = jax.jit(jax.shard_map(
-            body, mesh=mesh, in_specs=P("pod"), out_specs=P(),
-            check_vma=False))(x)
+        out = jax.jit(compat.shard_map(
+            body, mesh=mesh, in_specs=P("pod"), out_specs=P()))(x)
         exact = np.asarray(x.sum(0))
         got = np.asarray(out)
         scale = np.abs(x).max() / 127.0
@@ -91,6 +91,7 @@ def test_moe_collective_multipod_axes():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import sys; sys.path.insert(0, {SRC!r})
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.core.moe import MoEConfig, init_moe, moe_apply
 
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
@@ -100,7 +101,7 @@ def test_moe_collective_multipod_axes():
         params = init_moe(jax.random.PRNGKey(0), cfg)
         x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
         dense = moe_apply(params, cfg, x, backend="dense")
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             got = jax.jit(lambda p, x: moe_apply(
                 p, cfg, x, backend="collective", mesh=mesh))(params, x)
         err = float(jnp.abs(got - dense).max())
